@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: engine construction + throughput measurement."""
+from __future__ import annotations
+
+import time
+
+from repro.core.engine import EngineConfig, ParsirEngine
+from repro.phold.model import Phold, PholdParams
+
+
+def build(o=512, m=20, s=512, p=0.004, lookahead=0.5, dist="exponential",
+          scheduler="batch", epoch_len=None, bucket_cap=256, route_cap=32768,
+          fallback_cap=32768, mesh=None, **kw):
+    model = Phold(PholdParams(n_objects=o, initial_events=m, state_nodes=s,
+                              realloc_fraction=p, lookahead=lookahead,
+                              dist=dist))
+    cfg = EngineConfig(lookahead=lookahead, epoch_len=epoch_len,
+                       n_buckets=16, bucket_cap=bucket_cap,
+                       route_cap=route_cap, fallback_cap=fallback_cap,
+                       scheduler=scheduler, **kw)
+    return ParsirEngine(model, cfg, mesh=mesh)
+
+
+def throughput(eng, warmup_epochs=10, epochs=40):
+    """Events/second over a timed run (post-warmup/compile)."""
+    st = eng.init()
+    st = eng.run(st, warmup_epochs)          # compile + warm
+    before = eng.totals(st)["processed"]
+    t0 = time.perf_counter()
+    st = eng.run(st, epochs)
+    for l in (st.stats.processed,):
+        l.block_until_ready()
+    dt = time.perf_counter() - t0
+    tot = eng.totals(st)
+    n = tot["processed"] - before
+    clean = (tot["cal_overflow"] == 0 and tot["late_events"] == 0
+             and tot["route_overflow"] == 0 and tot["fb_overflow"] == 0)
+    return n / dt, n, dt, clean

@@ -1,0 +1,120 @@
+"""§Perf for the paper's own engine: hypothesis→change→measure iterations.
+
+Runs the PARSIR engine hillclimb ladder on CPU (wall-clock events/s) and
+reports, for each routing strategy, the *structural* per-epoch exchange bytes
+(what the ICI would carry on a pod) — the measurable CPU proxy plus the
+analytic collective term.
+
+  PYTHONPATH=src python -m benchmarks.pdes_perf [--devices 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = textwrap.dedent("""
+    import json, sys, time
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.core.engine import AXIS, EngineConfig, ParsirEngine
+    from repro.phold.model import Phold, PholdParams
+
+    spec = json.loads(sys.argv[1])
+    D = spec["devices"]
+    mesh = Mesh(np.array(jax.devices()[:D]), (AXIS,))
+    p = PholdParams(n_objects=spec["o"], initial_events=spec["m"],
+                    state_nodes=spec["s"], realloc_fraction=0.004,
+                    lookahead=spec["la"], dist=spec["dist"],
+                    hot_objects=spec.get("hot_o", 0),
+                    hot_prob=spec.get("hot_p", 0))
+    model = Phold(p)
+    cfg = EngineConfig(lookahead=p.lookahead,
+                       epoch_len=spec.get("epoch_len"),
+                       n_buckets=32, bucket_cap=spec.get("bucket_cap", 256),
+                       route_cap=spec["route_cap"], fallback_cap=16384,
+                       route=spec["route"], scheduler=spec.get("sched","batch"),
+                       steal=spec.get("steal", False), steal_cap=8,
+                       claim_cap=16,
+                       batch_impl=spec.get("batch_impl", "rounds"))
+    eng = ParsirEngine(model, cfg, mesh=mesh)
+    st = eng.run(eng.init(), spec.get("warm", 6))
+    base = eng.totals(st)["processed"]
+    t0 = time.perf_counter()
+    st = eng.run(st, spec["epochs"])
+    st.stats.processed.block_until_ready()
+    dt = time.perf_counter() - t0
+    tot = eng.totals(st)
+    n = tot["processed"] - base
+    # structural exchange bytes per epoch: record bytes are 17B/event
+    # (dst4 ts4 seed4 payload4 valid1)
+    rec_b = 17
+    if spec["route"] == "allgather":
+        ex = D * D * spec["route_cap"] * rec_b          # D bufs to D devices
+    else:
+        ex = D * spec["route_cap"] * rec_b              # pairwise a2a
+    if spec.get("steal"):
+        state_b = p.state_nodes * (p.lanes * 4 + 4) + 8
+        loan_b = 8 * (cfg.bucket_cap * 12 + state_b)
+        ex += 2 * D * D * loan_b                        # publish + return
+    print(json.dumps({"ev_s": n / dt, "n": n, "dt": dt, "stats": tot,
+                      "exchange_bytes_per_epoch": ex}))
+""")
+
+BASE = dict(o=512, m=40, s=256, la=0.5, dist="exponential", route_cap=8192,
+            epochs=30)
+
+
+def run_child(devices: int, **spec):
+    merged = dict(BASE, devices=devices, **spec)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _CHILD, json.dumps(merged)],
+                       env=env, capture_output=True, text=True, timeout=2400)
+    if r.returncode != 0:
+        return {"error": r.stderr[-300:]}
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--out", default="artifacts/pdes_perf.json")
+    args = ap.parse_args()
+    D = args.devices
+
+    ladder = [
+        ("baseline_paper_faithful", dict(route="allgather")),
+        ("it1_route_a2a", dict(route="a2a")),
+        ("it2_epoch_half_L", dict(route="a2a", epoch_len=0.25)),
+        ("skew_baseline_nosteal", dict(route="a2a", hot_o=32, hot_p=96,
+                                       bucket_cap=512)),
+        ("skew_it3_steal", dict(route="a2a", hot_o=32, hot_p=96,
+                                bucket_cap=512, steal=True)),
+        ("ltf_reference_scheduler", dict(route="a2a", sched="ltf", epochs=10,
+                                         warm=2)),
+    ]
+    results = {}
+    for name, spec in ladder:
+        print(f"[pdes_perf] {name}...", flush=True)
+        results[name] = run_child(D, **spec)
+        r = results[name]
+        if "error" in r:
+            print(f"  ERROR {r['error']}")
+        else:
+            clean = (r["stats"]["late_events"] == 0
+                     and r["stats"]["cal_overflow"] == 0)
+            print(f"  {r['ev_s']:,.0f} ev/s  "
+                  f"exchange {r['exchange_bytes_per_epoch']/1e6:.2f} MB/epoch "
+                  f"stolen={r['stats']['stolen']} clean={clean}")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[pdes_perf] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Fig 4 analogue: PHOLD throughput vs model size O (objects), fixed
+worker count — a well-structured engine should stay ~flat."""
+from __future__ import annotations
+
+from .common import build, throughput
+
+
+def run(rows):
+    for o in (128, 256, 512, 1024):
+        eng = build(o=o, m=20, s=256, p=0.004, lookahead=0.5,
+                    dist="exponential")
+        ev_s, n, dt, clean = throughput(eng, warmup_epochs=5, epochs=30)
+        rows.append({
+            "name": f"fig4_modelsize_O{o}",
+            "us_per_call": 1e6 * dt / max(n, 1),
+            "derived": f"events_per_s={ev_s:.0f} n={n} clean={clean}",
+        })
+    return rows

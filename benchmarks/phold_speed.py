@@ -1,0 +1,19 @@
+"""Paper Fig 2 analogue: PHOLD throughput vs lookahead L and event population M
+(fixed model size; CPU-scaled O/S, same parameter axes as the paper)."""
+from __future__ import annotations
+
+from .common import build, throughput
+
+
+def run(rows):
+    for m in (10, 100):
+        for la in (0.1, 0.5, 1.0):
+            eng = build(o=256, m=m, s=256, lookahead=la, dist="exponential",
+                        bucket_cap=max(64, 4 * m))
+            ev_s, n, dt, clean = throughput(eng, warmup_epochs=5, epochs=30)
+            rows.append({
+                "name": f"fig2_speed_L{la}_M{m}",
+                "us_per_call": 1e6 * dt / max(n, 1),
+                "derived": f"events_per_s={ev_s:.0f} n={n} clean={clean}",
+            })
+    return rows

@@ -1,0 +1,46 @@
+"""End-to-end driver (the paper's kind: run a full simulation campaign).
+
+Reproduces the STRUCTURE of the paper's Figs 2-4 on CPU-scaled PHOLD
+configurations, printing the tables the paper plots.
+
+  PYTHONPATH=src python examples/phold_experiments.py [--fast]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from common import build, throughput  # benchmarks/common.py
+
+    epochs = 15 if args.fast else 40
+
+    print("== Fig 2: throughput vs lookahead L and population M ==")
+    print(f"{'L':>5} {'M':>6} {'events/s':>12}")
+    for m in (10, 100):
+        for la in (0.1, 0.5, 1.0):
+            eng = build(o=256, m=m, s=256, lookahead=la, dist="exponential",
+                        bucket_cap=max(64, 4 * m))
+            ev_s, n, dt, clean = throughput(eng, warmup_epochs=3,
+                                            epochs=epochs)
+            flag = "" if clean else "  [capacity overflow!]"
+            print(f"{la:>5} {m:>6} {ev_s:>12,.0f}{flag}")
+
+    print("\n== Fig 4: throughput vs model size O (fixed workers) ==")
+    print(f"{'O':>6} {'events/s':>12}")
+    for o in (128, 256, 512, 1024):
+        eng = build(o=o, m=20, s=256, lookahead=0.5, dist="exponential")
+        ev_s, n, dt, clean = throughput(eng, warmup_epochs=3, epochs=epochs)
+        print(f"{o:>6} {ev_s:>12,.0f}")
+
+    print("\n(strong scaling over worker counts: "
+          "PYTHONPATH=src python -m benchmarks.run — fig3 rows)")
+
+
+if __name__ == "__main__":
+    main()

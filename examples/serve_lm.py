@@ -1,0 +1,49 @@
+"""Serve a (reduced) LM with batched requests: prefill + greedy decode.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch llama3.2-3b --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import make_batch
+from repro.models.registry import build_model
+from repro.serve.engine import ServeSession
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, args.batch, args.prompt_len)
+
+    sess = ServeSession(model, params, args.batch,
+                        max_len=args.prompt_len + args.tokens + 1,
+                        dtype=np.float32)
+    t0 = time.perf_counter()
+    first = sess.prefill(batch)
+    t1 = time.perf_counter()
+    out = sess.decode(first, args.tokens - 1)
+    t2 = time.perf_counter()
+
+    total = args.batch * (args.tokens - 1)
+    print(f"arch={cfg.name} (reduced) batch={args.batch}")
+    print(f"prefill: {1e3*(t1-t0):.0f} ms; decode: {1e3*(t2-t1):.0f} ms "
+          f"({total/(t2-t1):,.0f} tok/s incl. compile)")
+    print("sampled continuations (token ids):")
+    for b in range(args.batch):
+        print(f"  req{b}: {[int(first[b])] + out[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""The application-facing API (paper §I).
+
+PARSIR exposes exactly two services to model code::
+
+    ScheduleNewEvent(...)   — inject a future event for any object
+    ProcessEvent(...)       — callback: the model processes one event
+
+The JAX-functional equivalent is the :class:`SimModel` protocol below.
+``process_event`` is the ProcessEvent callback; the events it *returns* are the
+ScheduleNewEvent calls (a functional engine can't accept callbacks mid-trace, so
+scheduling is by return value — the ``EmittedEvents`` batch).  The engine vmaps
+``process_event`` over all local objects (each applying its r-th in-order event
+per round), which is the SPMD realization of the paper's per-object batch
+processing.
+
+Contract (the conservative-correctness obligations):
+  * every emitted event must satisfy ``ts_out >= ts_in + lookahead`` — the
+    engine counts violations (``stats.lookahead_violations``) and the driver
+    refuses to continue on nonzero;
+  * emitted dst are *global* object ids (the engine routes them);
+  * all randomness must come from the event ``seed`` via ``core.events.fold``
+    so results are independent of processing order and device count.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+
+
+class EmittedEvents(NamedTuple):
+    """Up to ``max_out`` events emitted while processing one event."""
+
+    dst: jax.Array      # i32 [max_out] global object id
+    ts: jax.Array       # f32 [max_out]
+    seed: jax.Array     # u32 [max_out]
+    payload: jax.Array  # f32 [max_out]
+    valid: jax.Array    # bool [max_out]
+
+
+class SimModel(abc.ABC):
+    """A discrete-event simulation model runnable by the PARSIR engine."""
+
+    #: maximum number of events a single ProcessEvent call can emit.
+    max_out: int = 1
+
+    @property
+    @abc.abstractmethod
+    def n_objects(self) -> int:
+        ...
+
+    @abc.abstractmethod
+    def init_object_state(self, global_ids: np.ndarray) -> Any:
+        """Per-object state pytree with leading dim ``len(global_ids)``."""
+
+    @abc.abstractmethod
+    def initial_events(self) -> dict[str, np.ndarray]:
+        """The model's bootstrap events as flat numpy arrays
+        {dst:i32[K], ts:f32[K], seed:u32[K], payload:f32[K]}."""
+
+    @abc.abstractmethod
+    def process_event(self, state_slice: Any, ts: jax.Array, seed: jax.Array,
+                      payload: jax.Array) -> tuple[Any, EmittedEvents]:
+        """ProcessEvent callback for a single object/event (engine vmaps it)."""

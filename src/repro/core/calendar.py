@@ -1,0 +1,182 @@
+"""The calendar multi-queue (paper §II-B), as dense device-resident rings.
+
+Per device we keep, for its local objects, a calendar of ``n_buckets`` epoch
+buckets with a static per-bucket capacity:
+
+    ts/seed/payload : [n_local, n_buckets, cap]     (compact: slots [0, cnt) live)
+    cnt             : [n_local, n_buckets]
+
+Buckets are reused circularly exactly as in the paper: bucket ``e % n_buckets``
+holds epoch ``e``; once epoch ``e`` is drained the bucket is cleared and becomes
+epoch ``e + n_buckets``.
+
+Insertion is the paper's "per-bucket spinlock" path made *structurally*
+conflict-free: incoming events are sorted by (object, bucket), ranks inside each
+group are computed with prefix sums, and every event lands at
+``cnt[obj, bucket] + rank`` — a lock-free scatter (the TPU replacement for RMW
+spinlocks: slot assignment by scan instead of contention).
+
+Extraction in the *current* epoch needs no synchronization at all, mirroring the
+paper's lock-free fast path: the SPMD owner is the only reader/writer, and the
+lookahead guarantees nobody inserts into the live bucket.
+
+Overflow (bucket capacity exceeded) is counted and returned — never silent; the
+conservative engine treats a nonzero count as a hard error at the driver level.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .events import EventBatch
+
+
+class Calendar(NamedTuple):
+    ts: jax.Array       # f32 [n_local, n_buckets, cap]
+    seed: jax.Array     # u32 [n_local, n_buckets, cap]
+    payload: jax.Array  # f32 [n_local, n_buckets, cap]
+    cnt: jax.Array      # i32 [n_local, n_buckets]
+
+    @property
+    def n_local(self) -> int:
+        return self.ts.shape[0]
+
+    @property
+    def n_buckets(self) -> int:
+        return self.ts.shape[1]
+
+    @property
+    def cap(self) -> int:
+        return self.ts.shape[2]
+
+
+def make_calendar(n_local: int, n_buckets: int, cap: int) -> Calendar:
+    return Calendar(
+        ts=jnp.full((n_local, n_buckets, cap), jnp.inf, jnp.float32),
+        seed=jnp.zeros((n_local, n_buckets, cap), jnp.uint32),
+        payload=jnp.zeros((n_local, n_buckets, cap), jnp.float32),
+        cnt=jnp.zeros((n_local, n_buckets), jnp.int32),
+    )
+
+
+def _group_ranks(key: jax.Array, valid: jax.Array, sentinel: int):
+    """Sort events by group key; return (order, sorted_key, rank-in-group).
+
+    rank[i] = position of sorted element i inside its contiguous key group —
+    the prefix-sum replacement for fetch_and_add slot assignment.
+    """
+    k = jnp.where(valid, key, sentinel)
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    idx = jnp.arange(k.shape[0], dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    start_idx = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank = idx - start_idx
+    return order, ks, rank
+
+
+def insert(cal: Calendar, local_idx: jax.Array, epoch: jax.Array,
+           ts: jax.Array, seed: jax.Array, payload: jax.Array,
+           valid: jax.Array):
+    """Insert a flat batch of events destined to local objects.
+
+    epoch must already be within the calendar horizon (caller splits fallback).
+    Returns (calendar, n_overflow).
+    """
+    n_local, n_buckets, cap = cal.ts.shape
+    bucket = (epoch % n_buckets).astype(jnp.int32)
+    key = local_idx * n_buckets + bucket
+    sentinel = n_local * n_buckets
+    order, ks, rank = _group_ranks(key, valid, sentinel)
+
+    ts_s = ts[order]
+    seed_s = seed[order]
+    pay_s = payload[order]
+    valid_s = ks < sentinel
+
+    base = cal.cnt.reshape(-1)[jnp.where(valid_s, ks, 0)]
+    slot = base + rank
+    ok = valid_s & (slot < cap)
+    n_overflow = jnp.sum((valid_s & ~ok).astype(jnp.int32))
+
+    flat = jnp.where(ok, ks * cap + slot, n_local * n_buckets * cap)
+    new_ts = cal.ts.reshape(-1).at[flat].set(ts_s, mode="drop").reshape(cal.ts.shape)
+    new_seed = cal.seed.reshape(-1).at[flat].set(seed_s, mode="drop").reshape(cal.seed.shape)
+    new_pay = cal.payload.reshape(-1).at[flat].set(pay_s, mode="drop").reshape(cal.payload.shape)
+
+    cnt_flat = cal.cnt.reshape(-1).at[jnp.where(ok, ks, sentinel)].add(
+        jnp.ones_like(ks, jnp.int32), mode="drop")
+    new_cnt = cnt_flat.reshape(cal.cnt.shape)
+    return Calendar(new_ts, new_seed, new_pay, new_cnt), n_overflow
+
+
+def extract_sorted(cal: Calendar, epoch: jax.Array):
+    """Drain the bucket for ``epoch``: per-object events sorted by (ts, seed).
+
+    Returns (calendar-with-cleared-bucket, ts, seed, payload, cnt_b) where the
+    event arrays are [n_local, cap] with invalid slots at ts=+inf.  This is the
+    paper's lock-free current-epoch extraction — plus the batch ordering that
+    per-object causality requires.
+    """
+    n_local, n_buckets, cap = cal.ts.shape
+    b = (epoch % n_buckets).astype(jnp.int32)
+    ts = jax.lax.dynamic_index_in_dim(cal.ts, b, axis=1, keepdims=False)
+    seed = jax.lax.dynamic_index_in_dim(cal.seed, b, axis=1, keepdims=False)
+    pay = jax.lax.dynamic_index_in_dim(cal.payload, b, axis=1, keepdims=False)
+    cnt_b = jax.lax.dynamic_index_in_dim(cal.cnt, b, axis=1, keepdims=False)
+
+    live = jnp.arange(cap, dtype=jnp.int32)[None, :] < cnt_b[:, None]
+    ts = jnp.where(live, ts, jnp.inf)
+
+    # lexicographic (ts, seed): two stable argsorts composed.
+    p1 = jnp.argsort(seed, axis=1, stable=True)
+    ts1 = jnp.take_along_axis(ts, p1, axis=1)
+    p2 = jnp.argsort(ts1, axis=1, stable=True)
+    order = jnp.take_along_axis(p1, p2, axis=1)
+
+    ts = jnp.take_along_axis(ts, order, axis=1)
+    seed = jnp.take_along_axis(seed, order, axis=1)
+    pay = jnp.take_along_axis(pay, order, axis=1)
+
+    # clear the bucket for reuse (epoch + n_buckets).
+    new_cnt = jax.lax.dynamic_update_index_in_dim(
+        cal.cnt, jnp.zeros((n_local,), jnp.int32), b, axis=1)
+    new_ts = jax.lax.dynamic_update_index_in_dim(
+        cal.ts, jnp.full((n_local, cap), jnp.inf, jnp.float32), b, axis=1)
+    return cal._replace(ts=new_ts, cnt=new_cnt), ts, seed, pay, cnt_b
+
+
+class Fallback(NamedTuple):
+    """The per-thread TLS fallback list (paper §II-B) → per-device buffer.
+
+    Events whose epoch lies beyond the calendar horizon (or that missed the
+    route-capacity this epoch) park here with their *global* dst and are
+    re-offered every epoch close, exactly like the paper drains TLS lists as
+    the circular calendar advances.
+    """
+
+    events: EventBatch  # flat [cap]
+
+    @property
+    def cap(self) -> int:
+        return self.events.capacity
+
+
+def make_fallback(cap: int) -> Fallback:
+    from .events import empty_batch
+    return Fallback(empty_batch(cap))
+
+
+def fallback_put(fb: Fallback, new: EventBatch):
+    """Append valid events of ``new`` into free slots of the fallback buffer.
+
+    Returns (fallback, n_overflow).  Compaction keeps live events in front.
+    """
+    from .events import compact, concat_batches
+    merged = compact(concat_batches(fb.events, new))
+    cap = fb.cap
+    keep = EventBatch(*(x[..., :cap] for x in merged))
+    spill = merged.valid[..., cap:]
+    return Fallback(keep), jnp.sum(spill.astype(jnp.int32))

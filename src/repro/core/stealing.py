@@ -1,0 +1,80 @@
+"""Work stealing (paper §II-A), adapted to SPMD as epoch-granular batch loans.
+
+In PARSIR a thread that drains its local NUMA node's object counter starts
+drawing object ids from remote nodes and processes those objects' current-epoch
+batches through remote memory accesses.  TPU chips have no remote memory, so
+the *loan* is explicit: because the lookahead closes the epoch's workload before
+processing starts, per-device loads are known up front, and overloaded devices
+publish (object state + current-epoch events) of their hottest objects; a
+deterministic plan — computed identically on every device from the gathered
+load vector, the SPMD replacement for the fetch_and_add counters — assigns each
+loan to an underloaded receiver.  Receivers process loaned batches alongside
+their own and return the updated state; emitted events flow through normal
+routing.  Ownership (calendars, future insertions) never moves.
+
+Everything is static-shape: ``steal_cap`` loans per donor, ``claim_cap`` claims
+per receiver; unassigned loans are simply processed by their owner as usual.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LoanPlan(NamedTuple):
+    # flat over D * steal_cap published loans
+    assignee: jax.Array   # i32 [D*steal_cap] receiving device, or D if unassigned
+    claimed: jax.Array    # bool [D*steal_cap] assigned AND within receiver claim_cap
+
+
+def plan_loans(loads: jax.Array, loan_weight: jax.Array, loan_valid: jax.Array,
+               claim_cap: int) -> LoanPlan:
+    """Deterministic donor→receiver assignment, computed replicated.
+
+    loads:       i32 [D]   per-device event load this epoch (post all_gather)
+    loan_weight: i32 [D, steal_cap] event count of each published loan (0 if invalid)
+    loan_valid:  bool [D, steal_cap]
+    """
+    D = loads.shape[0]
+    total = jnp.sum(loads)
+    target = (total + D - 1) // D
+    deficit = jnp.maximum(0, target - loads)              # receiver capacity
+
+    w = jnp.where(loan_valid, loan_weight, 0).reshape(-1)  # [D*steal_cap]
+    cum_w = jnp.cumsum(w)                                  # inclusive
+    cum_cap = jnp.cumsum(deficit)                          # [D]
+    # loan j goes to the first receiver whose cumulative capacity covers it.
+    assignee = jnp.searchsorted(cum_cap, cum_w, side="left").astype(jnp.int32)
+    assignee = jnp.where(loan_valid.reshape(-1) & (assignee < D), assignee, D)
+
+    # rank of each loan among those assigned to the same receiver.
+    onehot = (assignee[:, None] == jnp.arange(D)[None, :]).astype(jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    my_rank = jnp.sum(rank * onehot, axis=1)
+    claimed = (assignee < D) & (my_rank < claim_cap)
+    return LoanPlan(assignee, claimed)
+
+
+def select_loans(cnt_b: jax.Array, load: jax.Array, target: jax.Array,
+                 steal_cap: int):
+    """Per-donor choice of which objects to publish: its hottest objects, up to
+    ``steal_cap``, only while the donor stays above the target load."""
+    top_cnt, top_idx = jax.lax.top_k(cnt_b, steal_cap)
+    # keep loaning only while the running surplus remains positive.
+    surplus = load - target
+    shipped = jnp.cumsum(top_cnt) - top_cnt   # exclusive prefix
+    valid = (top_cnt > 0) & (surplus > 0) & (shipped < surplus)
+    return top_idx.astype(jnp.int32), jnp.where(valid, top_cnt, 0), valid
+
+
+def gather_rows(tree: Any, idx: jax.Array) -> Any:
+    return jax.tree.map(lambda l: l[idx], tree)
+
+
+def scatter_rows(tree: Any, idx: jax.Array, rows: Any, mask: jax.Array) -> Any:
+    def put(l, r):
+        safe_idx = jnp.where(mask, idx, l.shape[0])
+        return l.at[safe_idx].set(r, mode="drop")
+    return jax.tree.map(put, tree, rows)

@@ -1,0 +1,69 @@
+"""Deterministic synthetic data pipeline.
+
+Produces token batches (and frontend-stub embeddings) as a pure function of
+(step, shard) — no host state, so any worker can regenerate any batch after a
+restart or an elastic reshard (the data-pipeline side of fault tolerance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def batch_spec(cfg, batch: int, seq: int):
+    """ShapeDtypeStructs for one global batch (used by dry-run + eval_shape)."""
+    if cfg.frontend == "audio":
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.dtype(cfg.dtype)),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq - cfg.n_patches),
+                                           jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def make_batch(cfg, batch: int, seq: int, step: int = 0, seed: int = 0):
+    """Materialize one deterministic batch matching batch_spec."""
+    rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003)
+                                + np.uint64(step))
+    if cfg.frontend == "audio":
+        return {
+            "embeds": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)) * 0.02,
+                jnp.dtype(cfg.dtype)),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq - cfg.n_patches)),
+                jnp.int32),
+            "patch_embeds": jnp.asarray(
+                rng.standard_normal((batch, cfg.n_patches, cfg.d_model)) * 0.02,
+                jnp.dtype(cfg.dtype)),
+        }
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+
+
+class SyntheticLoader:
+    """Sharded iterator: each data shard regenerates its slice independently."""
+
+    def __init__(self, cfg, global_batch: int, seq: int, seed: int = 0,
+                 shard: int = 0, n_shards: int = 1):
+        assert global_batch % n_shards == 0
+        self.cfg, self.seq, self.seed = cfg, seq, seed
+        self.local_batch = global_batch // n_shards
+        self.shard = shard
+
+    def batch_at(self, step: int):
+        return make_batch(self.cfg, self.local_batch, self.seq, step,
+                          seed=self.seed * 131 + self.shard)

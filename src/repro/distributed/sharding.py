@@ -1,0 +1,247 @@
+"""Sharding rules: logical axes → mesh axes, safe constraint helpers.
+
+Logical names used across the stack:
+  batch   → ("pod", "data")   activations' leading batch dim
+  vocab   → "model"           embedding / logits vocab dim
+  heads   → "model"           attention heads (when divisible)
+  ffn     → "model"           MLP hidden dim
+  expert  → "model"           MoE expert dim
+  capacity→ "data"            MoE expert-buffer capacity dim
+
+``maybe_constraint`` degrades to identity when there is no ambient mesh (CPU
+unit tests) or when the requested axes don't exist/divide — so model code can
+be written once and run anywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def ambient_mesh() -> Optional[Mesh]:
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def _resolve(axis, mesh: Mesh):
+    """Map a logical spec entry onto the mesh, dropping absent axes."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        got = tuple(a for a in axis if a in mesh.axis_names)
+        return got if got else None
+    return axis if axis in mesh.axis_names else None
+
+
+def logical(*axes) -> P:
+    """Build a PartitionSpec against the ambient mesh from logical entries,
+    dropping axes the mesh doesn't have."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return P()
+    return P(*(_resolve(a, mesh) for a in axes))
+
+
+def maybe_constraint(x, *axes):
+    """with_sharding_constraint that is a no-op without a mesh and drops
+    non-divisible axes.  The literal BATCH tuple is remapped per sharding
+    mode (fsdp shards batch over every axis)."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    axes = tuple(batch_axes() if (isinstance(a, tuple) and tuple(a) == BATCH)
+                 else a for a in axes)
+    resolved = []
+    for dim, a in enumerate(axes):
+        r = _resolve(a, mesh)
+        if r is not None:
+            size = int(np.prod([mesh.shape[n] for n in
+                                (r if isinstance(r, tuple) else (r,))]))
+            if x.shape[dim] % size != 0:
+                r = None
+        resolved.append(r)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    except Exception:
+        return x
+
+
+BATCH = ("pod", "data")
+_MODE = {"value": "megatron"}
+
+
+def set_mode(mode: str):
+    """megatron: TP over 'model', batch over ('pod','data').
+    fsdp: ZeRO-3 — params sharded over every axis on their largest divisible
+    dim; batch/activations sharded over ALL axes; no tensor parallelism."""
+    _MODE["value"] = mode
+
+
+def get_mode() -> str:
+    return _MODE["value"]
+
+
+def batch_axes():
+    return ("pod", "data", "model") if _MODE["value"] == "fsdp" else BATCH
+
+
+def batch_spec() -> P:
+    return logical(batch_axes())
+
+
+def use_param(w):
+    """ZeRO-3 use-site materialization: under fsdp mode, constrain a stored-
+    sharded weight to replicated right before its dot — GSPMD then emits the
+    per-layer weight all-gather (and the matching grad reduce-scatter in the
+    backward), instead of gathering activations (the v4 failure mode)."""
+    if _MODE["value"] != "fsdp":
+        return w
+    mesh = ambient_mesh()
+    if mesh is None:
+        return w
+    try:
+        return jax.lax.with_sharding_constraint(w, P(*([None] * w.ndim)))
+    except Exception:
+        return w
+
+
+# -- parameter sharding rules ---------------------------------------------------
+
+_RULES = [
+    # (path substring match, spec builder by array ndim)
+    ("embed/tok", lambda nd: _pad(P("model", None), nd)),
+    ("embed/head", lambda nd: _pad(P(None, "model"), nd)),
+    ("patch_proj", lambda nd: _pad(P(None, None), nd)),
+    ("attn/wq", lambda nd: _pad(P(None, "model"), nd)),
+    ("attn/wk", lambda nd: _pad(P(None, "model"), nd)),
+    ("attn/wv", lambda nd: _pad(P(None, "model"), nd)),
+    ("attn/wo", lambda nd: _pad(P("model", None), nd)),
+    ("attn/wdkv", lambda nd: _pad(P(None, None), nd)),
+    ("attn/wkr", lambda nd: _pad(P(None, None), nd)),
+    ("attn/wukv", lambda nd: _pad(P(None, "model"), nd)),
+    ("moe/router", lambda nd: _pad(P(None, None), nd)),
+    # expert-FSDP: experts shard over "model", the ff dim over "data" — a 1T
+    # MoE's weights spread over the full chip grid, not just the TP axis.
+    ("moe/wg", lambda nd: _pad(P("model", None, "data"), nd, expert=True)),
+    ("moe/wu", lambda nd: _pad(P("model", None, "data"), nd, expert=True)),
+    ("moe/wd", lambda nd: _pad(P("model", "data", None), nd, expert=True)),
+    ("shared/wg", lambda nd: _pad(P(None, "model"), nd)),
+    ("shared/wu", lambda nd: _pad(P(None, "model"), nd)),
+    ("shared/wd", lambda nd: _pad(P("model", None), nd)),
+    ("mlp/wg", lambda nd: _pad(P(None, "model"), nd)),
+    ("mlp/wu", lambda nd: _pad(P(None, "model"), nd)),
+    ("mlp/wd", lambda nd: _pad(P("model", None), nd)),
+    # zamba shared attention / mlstm / mamba projections
+    ("wq", lambda nd: _pad(P(None, "model"), nd)),
+    ("wk", lambda nd: _pad(P(None, "model"), nd)),
+    ("wv", lambda nd: _pad(P(None, "model"), nd)),
+    ("wo", lambda nd: _pad(P("model", None), nd)),
+    ("wg", lambda nd: _pad(P(None, "model"), nd)),
+    ("wu", lambda nd: _pad(P(None, "model"), nd)),
+    ("wd", lambda nd: _pad(P("model", None), nd)),
+    ("wup", lambda nd: _pad(P(None, "model"), nd)),
+    ("wdown", lambda nd: _pad(P("model", None), nd)),
+    ("win", lambda nd: _pad(P(None, "model"), nd)),
+    ("wout", lambda nd: _pad(P("model", None), nd)),
+    ("wproj", lambda nd: _pad(P("model", None), nd)),
+    ("wx", lambda nd: _pad(P(None, "model"), nd)),
+]
+
+
+def _pad(spec: P, nd: int, expert: bool = False) -> P:
+    """Left-pad a spec with None for stacked leading dims (scan layers)."""
+    pad = nd - len(spec)
+    if pad < 0:
+        return P(*tuple(spec)[-nd:])
+    return P(*([None] * pad + list(spec)))
+
+
+def param_spec(path: str, ndim: int) -> P:
+    for frag, builder in _RULES:
+        if frag in path:
+            return builder(ndim)
+    return P(*([None] * ndim))
+
+
+def _path_str(kp) -> str:
+    import jax.tree_util as jtu
+    parts = []
+    for k in kp:
+        if isinstance(k, jtu.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jtu.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jtu.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def params_shardings(params_shape: Any, mesh: Mesh, mode: str | None = None):
+    """NamedShardings for a params pytree (works on ShapeDtypeStructs)."""
+    import jax.tree_util as jtu
+    mode = mode or _MODE["value"]
+
+    if mode == "fsdp":
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+
+        def spec_fsdp(kp, leaf):
+            # shard the largest divisible dim over ALL axes (ZeRO-3)
+            cands = [(s, i) for i, s in enumerate(leaf.shape)
+                     if s % size == 0 and s >= size]
+            spec = [None] * len(leaf.shape)
+            if cands:
+                _, dim = max(cands)
+                spec[dim] = axes
+            return NamedSharding(mesh, P(*spec))
+
+        return jtu.tree_map_with_path(spec_fsdp, params_shape)
+
+    def spec_for(kp, leaf):
+        path = _path_str(kp)
+        sp = param_spec(path, len(leaf.shape))
+        # drop axes that don't divide
+        fixed = []
+        for dim, a in enumerate(tuple(sp)):
+            if a is None:
+                fixed.append(None)
+                continue
+            names = a if isinstance(a, tuple) else (a,)
+            if any(n not in mesh.axis_names for n in names):
+                fixed.append(None)
+                continue
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            fixed.append(a if leaf.shape[dim] % size == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jtu.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh, mode: str | None = None):
+    mode = mode or _MODE["value"]
+    src = ("pod", "data", "model") if mode == "fsdp" else BATCH
+
+    def spec_for(leaf):
+        names = tuple(a for a in src if a in mesh.axis_names)
+        if not names:
+            return NamedSharding(mesh, P())
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        lead = names if leaf.shape and leaf.shape[0] % size == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(leaf.shape) - 1))))
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: per-object batched event application (PHOLD hot loop).
+
+This is the paper's core locality idea (§II-A) mapped to the TPU memory
+hierarchy: PARSIR keeps a simulation object cache-hot while a worker thread
+processes the object's whole epoch batch; here the object's state tile is
+loaded **once** into VMEM, every event of its batch is applied in timestamp
+order by an in-kernel loop, and the state is written back **once**.  HBM
+traffic per epoch drops from O(events x touched-state) to O(state), which is
+exactly the paper's cache-miss argument restated for HBM<->VMEM.
+
+Layout notes (TPU adaptation, see DESIGN.md §2):
+  * node payloads are [LANES, S] per object — the long node axis is the lane
+    (minor) dimension, a multiple of 128 for S >= 128, so Mosaic tiles it
+    without padding blowup; LANES rides the sublane axis.
+  * the touch window is a contiguous dynamic slice (the model guarantees no
+    wraparound), so reads/writes are dense vector ops, not gathers.
+  * the arena free+alloc pair is the paper's stack allocator: a contiguous
+    store into ``addresses[top-KR : top)`` — LIFO reuse keeps the write in the
+    same VMEM-resident tile.
+
+Grid: one program instance per simulation object (the grid dimension is
+"arbitrary"/sequential-safe; instances are independent).  Events, counts and
+emitted-event buffers ride in VMEM blocks alongside the state.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_C1 = 0x9E3779B9
+_C2 = 0x85EBCA6B
+_C3 = 0xC2B2AE35
+_FOLD = 0x632BE59B
+
+
+def _mix(z):
+    z = (z + jnp.uint32(_C1)).astype(jnp.uint32)
+    z = (z ^ (z >> jnp.uint32(16))) * jnp.uint32(_C2)
+    z = (z ^ (z >> jnp.uint32(13))) * jnp.uint32(_C3)
+    return z ^ (z >> jnp.uint32(16))
+
+
+def _fold(seed, k: int):
+    return _mix(seed ^ jnp.uint32((k * _FOLD) & 0xFFFFFFFF))
+
+
+def _dyadic10(bits):
+    return (bits & jnp.uint32(1023)).astype(jnp.float32) * jnp.float32(1.0 / 1024.0)
+
+
+def _uniform24(bits):
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _draw(bits, dist: str, mean: float):
+    if dist == "dyadic":
+        return _dyadic10(bits)
+    if dist == "uniform24":
+        return _uniform24(bits) * jnp.float32(mean)
+    if dist == "exponential":
+        return -jnp.log1p(-_uniform24(bits)) * jnp.float32(mean)
+    raise ValueError(dist)
+
+
+def _kernel(ts_ref, seed_ref, cnt_ref,
+            payload_in, addr_in, top_in,
+            payload_out, addr_out, top_out,
+            odst, ots, oseed, opay, ovalid,
+            *, S, K, KR, LANES, C, n_objects, lookahead, dist, mean,
+            hot_objects=0, hot_prob=0):
+    # state tile becomes "hot": copied into the output VMEM block once.
+    payload_out[...] = payload_in[...]
+    addr_out[...] = addr_in[...]
+    top_out[...] = top_in[...]
+    ots[...] = jnp.full((1, C), jnp.inf, jnp.float32)
+    odst[...] = jnp.zeros((1, C), jnp.int32)
+    oseed[...] = jnp.zeros((1, C), jnp.uint32)
+    opay[...] = jnp.zeros((1, C), jnp.float32)
+    ovalid[...] = jnp.zeros((1, C), jnp.int32)
+
+    cnt = cnt_ref[0]
+
+    def body(r, _):
+        @pl.when(r < cnt)
+        def _apply():
+            ts = ts_ref[0, r]
+            seed = seed_ref[0, r]
+            start = (_fold(seed, 0) % jnp.uint32(S - K + 1)).astype(jnp.int32)
+            delta = _dyadic10(_fold(seed, 5))
+
+            # touch: one contiguous VMEM read+write of the hot window.
+            rows = pl.load(payload_out, (0, slice(None), pl.dslice(start, K)))
+            pl.store(payload_out, (0, slice(None), pl.dslice(start, K)),
+                     rows * jnp.float32(0.5) + delta)
+
+            # arena: free KR touched nodes then alloc KR (LIFO — stack alloc).
+            top = top_out[0]
+            top2 = top - KR
+            freed = start + KR - 1 - jnp.arange(KR, dtype=jnp.int32)
+            pl.store(addr_out, (0, pl.dslice(top2, KR)), freed)
+            initval = _dyadic10(_fold(seed, 6))
+            pl.store(payload_out, (0, slice(None), pl.dslice(start, KR)),
+                     jnp.full((LANES, KR), initval, jnp.float32))
+            # net top unchanged: free KR then alloc KR.
+
+            # emit one event (ScheduleNewEvent)
+            dst = (_fold(seed, 1) % jnp.uint32(n_objects)).astype(jnp.int32)
+            if hot_objects and hot_prob:
+                hot = (_fold(seed, 8) & jnp.uint32(255)) < jnp.uint32(hot_prob)
+                hot_dst = (_fold(seed, 9) % jnp.uint32(hot_objects)
+                           ).astype(jnp.int32)
+                dst = jnp.where(hot, hot_dst, dst)
+            odst[0, r] = dst
+            ots[0, r] = ts + jnp.float32(lookahead) + _draw(_fold(seed, 2), dist, mean)
+            oseed[0, r] = _fold(seed, 3)
+            opay[0, r] = _dyadic10(_fold(seed, 4))
+            ovalid[0, r] = 1
+        return 0
+
+    jax.lax.fori_loop(0, C, body, 0)
+
+
+def build_event_apply(*, S: int, LANES: int, C: int, K: int, KR: int,
+                      n_objects: int, lookahead: float, dist: str,
+                      mean: float, interpret: bool = True,
+                      hot_objects: int = 0, hot_prob: int = 0):
+    """Build a jit-able pallas_call for fixed static geometry."""
+    kern = functools.partial(_kernel, S=S, K=K, KR=KR, LANES=LANES, C=C,
+                             n_objects=n_objects, lookahead=lookahead,
+                             dist=dist, mean=mean, hot_objects=hot_objects,
+                             hot_prob=hot_prob)
+
+    def call(payload, addresses, top, ts, seed, cnt):
+        n = payload.shape[0]
+        grid = (n,)
+        out_shape = [
+            jax.ShapeDtypeStruct((n, LANES, S), jnp.float32),
+            jax.ShapeDtypeStruct((n, S), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, C), jnp.int32),
+            jax.ShapeDtypeStruct((n, C), jnp.float32),
+            jax.ShapeDtypeStruct((n, C), jnp.uint32),
+            jax.ShapeDtypeStruct((n, C), jnp.float32),
+            jax.ShapeDtypeStruct((n, C), jnp.int32),
+        ]
+        row = lambda i: (i, 0)
+        row3 = lambda i: (i, 0, 0)
+        one = lambda i: (i,)
+        in_specs = [
+            pl.BlockSpec((1, C), row),            # ts
+            pl.BlockSpec((1, C), row),            # seed
+            pl.BlockSpec((1,), one),              # cnt
+            pl.BlockSpec((1, LANES, S), row3),    # payload
+            pl.BlockSpec((1, S), row),            # addresses
+            pl.BlockSpec((1,), one),              # top
+        ]
+        out_specs = [
+            pl.BlockSpec((1, LANES, S), row3),
+            pl.BlockSpec((1, S), row),
+            pl.BlockSpec((1,), one),
+            pl.BlockSpec((1, C), row),
+            pl.BlockSpec((1, C), row),
+            pl.BlockSpec((1, C), row),
+            pl.BlockSpec((1, C), row),
+            pl.BlockSpec((1, C), row),
+        ]
+        return pl.pallas_call(
+            kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape, interpret=interpret,
+        )(ts, seed, cnt, payload, addresses, top)
+
+    return call

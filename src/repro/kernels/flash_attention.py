@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: GQA flash attention (forward).
+
+The perf-critical compute layer of the LM substrate (prefill path).  Online-
+softmax tiling: the grid's last dimension walks key/value blocks sequentially
+("arbitrary" semantics on TPU) while running max / normalizer / accumulator
+live in VMEM scratch — the working set per instance is
+(bq x d) + 2 x (bk x d) + (bq x bk), all MXU-aligned (block sizes are
+multiples of 128).
+
+GQA is expressed in the BlockSpec index maps: query head h reads KV head
+``h // group`` — no materialized KV repetition (saves HBM bandwidth, which is
+the dominant roofline term for decode-heavy shapes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *,
+            scale, causal, bq, bk, seq_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * jnp.float32(scale)                  # [bq, bk]
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_i[...] = l_i[...] * alpha + jnp.sum(p, axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_i[...] = m_new
+
+    if causal:
+        # block skip: fully-masked k blocks do no compute (their loads are
+        # prefetched by the BlockSpec machinery regardless — acceptable; the
+        # win is skipped MXU work on ~half the blocks).
+        pl.when((ki * bk) <= (qi * bq + bq - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_i[...], 1e-30)
+        o_ref[0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D].  Returns [B, Hq, Tq, D].
+
+    Tq % bq == 0 and Tk % bk == 0 (ops.py pads); Hq % Hkv == 0 (GQA).
+    """
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0 and Tq % bq == 0 and Tk % bk == 0
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qr = q.reshape(B * Hq, Tq, D)
+    kr = k.reshape(B * Hkv, Tk, D)
+    vr = v.reshape(B * Hkv, Tk, D)
+
+    grid = (B * Hq, Tq // bq, Tk // bk)
+
+    def qmap(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kvmap(bh, qi, ki):
+        b, h = bh // Hq, bh % Hq
+        return (b * Hkv + h // group, ki, 0)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                             bk=bk, seq_k=Tk)
+    from jax.experimental.pallas import tpu as pltpu
+    scratch = [
+        pltpu.VMEM((bq, D), jnp.float32),   # acc
+        pltpu.VMEM((bq,), jnp.float32),     # running max
+        pltpu.VMEM((bq,), jnp.float32),     # running normalizer
+    ]
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), qmap),
+            pl.BlockSpec((1, bk, D), kvmap),
+            pl.BlockSpec((1, bk, D), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), qmap),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tq, D), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Tq, D)

@@ -1,0 +1,92 @@
+"""jit'd public wrappers for the Pallas kernels (+ layout/padding adapters).
+
+Every op takes ``use_pallas``/``interpret`` switches: on this CPU container the
+kernels execute via ``interpret=True`` (validated against ref.py); on real TPU
+hardware the same pallas_call lowers to Mosaic.  The pure-jnp fallbacks are the
+production path used by the dry-run (XLA:CPU cannot compile Mosaic kernels).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .event_apply import build_event_apply
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+
+# -- event apply -------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _event_apply_cached(S, LANES, C, K, KR, n_objects, lookahead, dist, mean,
+                        interpret, hot_objects, hot_prob):
+    call = build_event_apply(S=S, LANES=LANES, C=C, K=K, KR=KR,
+                             n_objects=n_objects, lookahead=lookahead,
+                             dist=dist, mean=mean, interpret=interpret,
+                             hot_objects=hot_objects, hot_prob=hot_prob)
+    return jax.jit(call)
+
+
+def event_apply(payload, addresses, top, ts, seed, cnt, *, n_objects: int,
+                lookahead: float, K: int, KR: int, dist: str = "dyadic",
+                mean: float = 1.0, interpret: bool = True,
+                use_pallas: bool = True, hot_objects: int = 0,
+                hot_prob: int = 0):
+    """Batched per-object event application.  payload: [n, LANES, S]."""
+    n, LANES, S = payload.shape
+    C = ts.shape[1]
+    if not use_pallas:
+        return ref.event_apply_ref(payload, addresses, top, ts, seed, cnt,
+                                   n_objects=n_objects, lookahead=lookahead,
+                                   K=K, KR=KR, dist=dist, mean=mean,
+                                   hot_objects=hot_objects, hot_prob=hot_prob)
+    fn = _event_apply_cached(S, LANES, C, K, KR, n_objects, lookahead, dist,
+                             mean, interpret, hot_objects, hot_prob)
+    return fn(payload, addresses, top, ts, seed, cnt)
+
+
+# -- attention ----------------------------------------------------------------
+
+def mha(q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128,
+        interpret: bool = True, use_pallas: bool = True):
+    """GQA attention.  q: [B,Hq,Tq,D]; k,v: [B,Hkv,Tk,D]."""
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal)
+    B, Hq, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq_, bk_ = min(bq, max(8, Tq)), min(bk, max(8, Tk))
+    pq = (-Tq) % bq_
+    pk = (-Tk) % bk_
+    if pk and not causal:
+        raise ValueError("non-causal attention requires Tk % bk == 0")
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention(q, k, v, causal=causal, bq=bq_, bk=bk_,
+                          interpret=interpret)
+    return out[:, :, :Tq, :]
+
+
+# -- SSD ----------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True,
+        use_pallas: bool = True):
+    """Mamba-2 SSD.  x: [b,T,H,P]; dt: [b,T,H]; A: [H]; B,C: [b,T,N]."""
+    if not use_pallas:
+        return ref.ssd_ref(x, dt, A, B, C)
+    b, T, H, P = x.shape
+    ch = min(chunk, T) if T % min(chunk, T) == 0 else chunk
+    pad = (-T) % ch
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 → identity update
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan(x, dt, A, B, C, chunk=ch, interpret=interpret)
+    return y[:, :T]

@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core import events as ev
+
+
+def event_apply_ref(payload, addresses, top, ts, seed, cnt, *,
+                    n_objects: int, lookahead: float, K: int, KR: int,
+                    dist: str = "dyadic", mean: float = 1.0,
+                    hot_objects: int = 0, hot_prob: int = 0):
+    """Oracle for kernels/event_apply.py.
+
+    Same signature/layout as the kernel: payload [n, LANES, S].  Applies each
+    object's sorted batch sequentially with plain jnp ops.
+    """
+    n, LANES, S = payload.shape
+    C = ts.shape[1]
+
+    def draw(bits):
+        if dist == "dyadic":
+            return ev.dyadic10(bits)
+        if dist == "uniform24":
+            return ev.uniform24(bits) * jnp.float32(mean)
+        if dist == "exponential":
+            return -jnp.log1p(-ev.uniform24(bits)) * jnp.float32(mean)
+        raise ValueError(dist)
+
+    def per_object(pay, addr, tp, ts_row, seed_row, c):
+        odst = jnp.zeros((C,), jnp.int32)
+        ots = jnp.full((C,), jnp.inf, jnp.float32)
+        oseed = jnp.zeros((C,), jnp.uint32)
+        opay = jnp.zeros((C,), jnp.float32)
+        ovalid = jnp.zeros((C,), jnp.int32)
+
+        def body(r, carry):
+            pay, addr, tp, odst, ots, oseed, opay, ovalid = carry
+
+            def apply(args):
+                pay, addr, tp, odst, ots, oseed, opay, ovalid = args
+                t = ts_row[r]
+                s = seed_row[r]
+                start = (ev.fold(s, 0) % jnp.uint32(S - K + 1)).astype(jnp.int32)
+                delta = ev.dyadic10(ev.fold(s, 5))
+                win = jax.lax.dynamic_slice(pay, (0, start), (LANES, K))
+                pay = jax.lax.dynamic_update_slice(
+                    pay, win * jnp.float32(0.5) + delta, (0, start))
+                top2 = tp - KR
+                freed = start + KR - 1 - jnp.arange(KR, dtype=jnp.int32)
+                addr = jax.lax.dynamic_update_slice(addr, freed, (top2,))
+                initval = ev.dyadic10(ev.fold(s, 6))
+                pay = jax.lax.dynamic_update_slice(
+                    pay, jnp.full((LANES, KR), initval, jnp.float32), (0, start))
+                dst = (ev.fold(s, 1) % jnp.uint32(n_objects)).astype(jnp.int32)
+                if hot_objects and hot_prob:
+                    hot = (ev.fold(s, 8) & jnp.uint32(255)) \
+                        < jnp.uint32(hot_prob)
+                    hdst = (ev.fold(s, 9) % jnp.uint32(hot_objects)
+                            ).astype(jnp.int32)
+                    dst = jnp.where(hot, hdst, dst)
+                odst = odst.at[r].set(dst)
+                ots = ots.at[r].set(t + jnp.float32(lookahead)
+                                    + draw(ev.fold(s, 2)))
+                oseed = oseed.at[r].set(ev.fold(s, 3))
+                opay = opay.at[r].set(ev.dyadic10(ev.fold(s, 4)))
+                ovalid = ovalid.at[r].set(1)
+                return pay, addr, tp, odst, ots, oseed, opay, ovalid
+
+            return jax.lax.cond(r < c, apply, lambda a: a,
+                                (pay, addr, tp, odst, ots, oseed, opay, ovalid))
+
+        out = jax.lax.fori_loop(0, C, body,
+                                (pay, addr, tp, odst, ots, oseed, opay, ovalid))
+        return out
+
+    return jax.vmap(per_object)(payload, addresses, top, ts, seed, cnt)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle for kernels/flash_attention.py: exact softmax attention w/ GQA.
+
+    q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D]."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C_mat):
+    """Oracle for kernels/ssd_scan.py: sequential Mamba-2 SSD recurrence.
+
+    x:  [b, T, H, P]   (input after in-proj/conv, per head)
+    dt: [b, T, H]      (positive step sizes, post-softplus)
+    A:  [H]            (negative scalars per head)
+    B:  [b, T, N]      (input projection to state, shared across heads)
+    C_mat: [b, T, N]   (output projection from state)
+    returns y: [b, T, H, P] with  h_t = exp(A*dt_t) h_{t-1} + dt_t * B_t x_t^T;
+    y_t = C_t^T h_t  (state h: [H, N, P]).
+    """
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(A * dtt)[:, None, None]          # [H,1,1]
+        upd = (dtt[:, None] * Bt[None, :])[:, :, None] * xt[:, None, :]
+        h = h * decay + upd                              # [H, N, P]
+        y = jnp.einsum("n,hnp->hp", Ct, h)
+        return h, y
+
+    def per_batch(xb, dtb, Bb, Cb):
+        h0 = jnp.zeros((H, N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb, dtb, Bb, Cb))
+        return ys
+
+    return jax.vmap(per_batch)(x.astype(jnp.float32), dt.astype(jnp.float32),
+                               B.astype(jnp.float32), C_mat.astype(jnp.float32)
+                               ).astype(x.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+The sequential SSM recurrence  h_t = exp(A·dt_t)·h_{t-1} + dt_t·B_t x_t^T,
+y_t = C_t^T h_t  is reorganized into chunkwise matmuls (the SSD algorithm),
+which is the TPU-native adaptation: instead of a length-T scalar scan (VPU
+bound), each Q-length chunk does four MXU matmuls —
+
+    intra:  y += ((C Bᵀ) ⊙ M̃) x          [Q,N]x[N,Q], [Q,Q]x[Q,P]
+    inter:  y += (C ⊙ e^L) h_prev        [Q,N]x[N,P]
+    state:  h  = e^{L_Q} h_prev + (B ⊙ w)ᵀ x   [N,Q]x[Q,P]
+
+with the inter-chunk state h ([N, P] per head) carried in VMEM scratch across
+the sequential chunk grid dimension.  Used by the zamba2 (Mamba-2 hybrid)
+architecture; the pure-jnp chunked form in models/mamba2.py mirrors the same
+math for the non-Pallas path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h, *, Q, H):
+    bh = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h[...] = jnp.zeros_like(h)
+
+    a = a_ref[bh % H]
+    dt = dt_ref[0].astype(jnp.float32)                    # [Q]
+    x = x_ref[0].astype(jnp.float32)                      # [Q, P]
+    Bm = b_ref[0].astype(jnp.float32)                     # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                     # [Q, N]
+
+    l = jnp.cumsum(a * dt)                                # [Q] inclusive
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(l[:, None] - l[None, :]), 0.0)
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    G = G * decay * dt[None, :]                           # [Q, Q]
+    y = jax.lax.dot_general(G, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot_general(Cm * jnp.exp(l)[:, None], h[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    w = jnp.exp(l[Q - 1] - l) * dt                        # [Q]
+    h[...] = jnp.exp(l[Q - 1]) * h[...] + jax.lax.dot_general(
+        Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
+    """x: [b, T, H, P]; dt: [b, T, H]; A: [H]; B, C: [b, T, N].
+
+    Returns y: [b, T, H, P].  T % chunk == 0 (ops.py pads)."""
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0
+    Q = chunk
+
+    xr = x.transpose(0, 2, 1, 3).reshape(b * H, T, P)
+    dtr = dt.transpose(0, 2, 1).reshape(b * H, T)
+    grid = (b * H, T // Q)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, Q=Q, H=H),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh // H, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh // H, ci, 0)),
+            pl.BlockSpec((H,), lambda bh, ci: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * H, T, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, B, C, A.astype(jnp.float32))
+    return out.reshape(b, H, T, P).transpose(0, 2, 1, 3)

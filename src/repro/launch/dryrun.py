@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+the production mesh built from 512 placeholder host devices.
+
+For each cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis (HLO FLOPs/bytes) and per-collective byte sums
+parsed from the post-SPMD HLO — the inputs to the §Roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --all --mesh multi --skip-collectives
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES
+from ..configs.registry import all_archs
+from ..distributed.sharding import batch_shardings, params_shardings
+from ..launch.mesh import make_production_mesh
+from ..launch.specs import cell_is_skipped, input_specs
+from ..serve.engine import cache_shardings, make_decode_step, make_prefill
+from ..train.step import make_train_step
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\])")
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|branches)=\{?%?([\w.\-]+)")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-exact collective accounting over post-SPMD HLO.
+
+    XLA prints a scan's `while` body computation once, but it executes
+    trip-count times (recorded in ``backend_config={"known_trip_count":...}``).
+    We build the computation call graph (whiles x trip, calls x 1) and scale
+    each collective's bytes by its computation's effective multiplier, so
+    per-layer collectives inside the layer scan count n_layers times — see
+    EXPERIMENTS.md §Roofline methodology (validated against unrolled HLO).
+    """
+    comps: dict[str, dict] = {}
+    entry = None
+    current = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if line and line[0] not in " \t" and line.endswith("{") \
+                and ("(" in line or line.startswith(("ENTRY", "%"))):
+            s = line.strip()
+            is_entry = s.startswith("ENTRY")
+            if is_entry:
+                s = s[len("ENTRY"):].strip()
+            name = s.lstrip("%").split("(")[0].split()[0].rstrip()
+            if not name or name == "HloModule":
+                current = None
+                continue
+            comps[name] = {"colls": [], "whiles": [], "calls": []}
+            current = name
+            if is_entry:
+                entry = name
+            continue
+        if current is None or current not in comps:
+            continue
+        if " while(" in line:
+            m = _BODY_RE.search(line)
+            if m:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                comps[current]["whiles"].append((m.group(1), trip))
+            continue
+        cm = _CALLS_RE.search(line)
+        if cm and " while(" not in line:
+            comps[current]["calls"].append(cm.group(1))
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f"{c}-start(" in line:
+                if f"{c}-done(" in line:
+                    continue
+                m = _SHAPE_RE.search(line)
+                if not m:
+                    continue
+                total = 0
+                if m.group(1) is not None:
+                    for dt, dims in _TUPLE_ELEM_RE.findall(m.group(1)):
+                        total += _shape_bytes(dt, dims)
+                else:
+                    total = _shape_bytes(m.group(2), m.group(3))
+                comps[current]["colls"].append((c, total))
+                break
+
+    # effective multiplier per computation (DAG walk from ENTRY)
+    mult: dict[str, float] = {}
+    if entry is not None:
+        stack = [(entry, 1.0)]
+        while stack:
+            name, m = stack.pop()
+            if name not in comps:
+                continue
+            mult[name] = max(mult.get(name, 0.0), m)
+            for body, trip in comps[name]["whiles"]:
+                stack.append((body, m * trip))
+            for callee in comps[name]["calls"]:
+                stack.append((callee, m))
+
+    out = {c: {"bytes": 0, "count": 0, "scaled_bytes": 0.0}
+           for c in _COLLECTIVES}
+    for name, info in comps.items():
+        m = mult.get(name, 1.0)
+        for c, b in info["colls"]:
+            out[c]["bytes"] += b
+            out[c]["count"] += 1
+            out[c]["scaled_bytes"] += b * m
+    return out
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        elif v in ("false", "False"):
+            v = False
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             skip_collectives: bool = False, mesh=None,
+             overrides: dict | None = None) -> dict:
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "ok"}
+    if overrides:
+        rec["overrides"] = dict(overrides)
+    reason = cell_is_skipped(arch, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        return rec
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec["n_devices"] = int(np.prod(list(mesh.shape.values())))
+    spec = input_specs(arch, shape_name, overrides=overrides)
+    cfg, model = spec["cfg"], spec["model"]
+    from ..distributed.sharding import set_mode
+    set_mode(getattr(cfg, "sharding_mode", "megatron"))
+
+    t0 = time.time()
+    with mesh:
+        psh = params_shardings(spec["params"], mesh)
+        if spec["kind"] == "train":
+            from ..configs.base import TrainConfig
+            tkw = {k[6:]: v for k, v in (overrides or {}).items()
+                   if k.startswith("train.")}
+            gsh = psh if (overrides or {}).get("_grad_shard") else None
+            step_fn = make_train_step(model, TrainConfig(**tkw),
+                                      grad_shardings=gsh)
+            osh = params_shardings(spec["opt_state"], mesh)
+            bsh = batch_shardings(spec["batch"], mesh)
+            jfn = jax.jit(step_fn, in_shardings=(psh, osh, bsh),
+                          donate_argnums=(0, 1))
+            lowered = jfn.lower(spec["params"], spec["opt_state"],
+                                spec["batch"])
+        elif spec["kind"] == "prefill":
+            fn = make_prefill(model)
+            bsh = batch_shardings(spec["batch"], mesh)
+            bs = SHAPES[shape_name].global_batch
+            csh = cache_shardings(spec["caches"], mesh, bs)
+            jfn = jax.jit(fn, in_shardings=(psh, bsh, csh),
+                          donate_argnums=(2,))
+            lowered = jfn.lower(spec["params"], spec["batch"], spec["caches"])
+        else:
+            fn = make_decode_step(model)
+            bs = SHAPES[shape_name].global_batch
+            csh = cache_shardings(spec["caches"], mesh, bs)
+            tsh = batch_shardings({"t": spec["tokens"]}, mesh)["t"]
+            rsh = NamedSharding(mesh, P())
+            jfn = jax.jit(fn, in_shardings=(psh, tsh, csh, rsh),
+                          donate_argnums=(2,))
+            cur = jax.ShapeDtypeStruct((), np.int32)
+            lowered = jfn.lower(spec["params"], spec["tokens"],
+                                spec["caches"], cur)
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(ma, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))
+                                and (k in ("flops", "transcendentals")
+                                     or k.startswith("bytes accessed"))}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+
+    if not skip_collectives:
+        t2 = time.time()
+        try:
+            txt = compiled.as_text()
+            rec["collectives"] = collective_bytes(txt)
+            rec["hlo_lines"] = txt.count("\n")
+        except Exception as e:  # pragma: no cover
+            rec["collectives_error"] = str(e)
+        rec["parse_s"] = round(time.time() - t2, 2)
+
+    # model params (analytic) for §Roofline MODEL_FLOPS = 6 N D
+    rec["param_count"] = int(cfg.param_count())
+    rec["active_param_count"] = int(cfg.active_param_count())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-collectives", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="tag for hillclimb runs (adds __<variant> to files)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field=value (train.* → TrainConfig)")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.override)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in all_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(args.arch, s) for s in shapes]
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{args.mesh}"
+        if args.variant:
+            tag += f"__{args.variant}"
+        path = outdir / f"{tag}.json"
+        if path.exists():
+            print(f"[dryrun] {tag}: cached", flush=True)
+            continue
+        print(f"[dryrun] {tag}: lowering...", flush=True)
+        try:
+            rec = run_cell(arch, shape, args.mesh,
+                           skip_collectives=args.skip_collectives, mesh=mesh,
+                           overrides=overrides)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "status": "error", "error": str(e),
+                   "traceback": traceback.format_exc()}
+            failures += 1
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] {tag}: {rec['status']} "
+              f"(compile {rec.get('compile_s', '-')}s)", flush=True)
+    print(f"[dryrun] done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

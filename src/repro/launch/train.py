@@ -1,0 +1,52 @@
+"""CLI training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args()
+
+    from ..configs.base import TrainConfig
+    from ..configs.registry import get_config
+    from ..data.synthetic import SyntheticLoader
+    from ..models.registry import build_model
+    from ..train.loop import Trainer
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 10),
+                       microbatch=args.microbatch,
+                       checkpoint_dir=args.ckpt_dir,
+                       checkpoint_every=args.ckpt_every)
+    loader = SyntheticLoader(cfg, args.batch, args.seq)
+    tr = Trainer(model, tcfg, loader=loader)
+    params, opt_state, hist = tr.run(args.steps)
+    print(f"[train] done: first loss {hist[0]['loss']:.4f} "
+          f"final loss {hist[-1]['loss']:.4f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(hist, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""Shared neural building blocks (pure JAX, shardable, eval_shape-safe).
+
+Conventions:
+  * params are plain dicts of jnp arrays; init fns take (cfg, key);
+  * activations run in cfg.dtype (bf16 by default), params kept f32;
+  * attention is *chunked* (online softmax over KV blocks via lax.scan) for
+    long sequences — scores are never materialized at [T, T], which is what
+    makes the 32k-prefill and 500k-decode shapes compilable at all.  The
+    Pallas flash kernel (kernels/flash_attention.py) is the TPU-optimized
+    realization of the same schedule (cfg.attn_impl = "pallas").
+  * decode paths take a KV cache with a traced ``cur_len`` and update in place
+    (arena-style static allocation — no dynamic shapes anywhere).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def dt_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def wp(p, name, cdt):
+    """Fetch a weight in compute dtype, fsdp-gathered at use site."""
+    from ..distributed.sharding import use_param
+    return use_param(p[name].astype(cdt))
+
+
+def cast_params(cfg, params):
+    """Cast float leaves to cfg.param_dtype (bf16 master weights for the
+    1T-scale configs; f32 default)."""
+    pd = jnp.dtype(cfg.param_dtype)
+    def cast(l):
+        return l.astype(pd) if jnp.issubdtype(l.dtype, jnp.floating) else l
+    return jax.tree.map(cast, params)
+
+
+# -- init helpers --------------------------------------------------------------
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# -- norms ----------------------------------------------------------------------
+
+def init_norm(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm(p, x, kind: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# -- rotary ----------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., T, H, hd]; positions: [..., T] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# -- chunked (flash-style) attention ---------------------------------------------
+
+def _attn_chunked(q, k, v, *, causal: bool, q_offset, chunk: int = 1024,
+                  compute_dtype=jnp.float32):
+    """q: [B,T,Hq,hd]; k,v: [B,S,Hkv,hd].  Online softmax over KV chunks.
+
+    q_offset: absolute position of q[0] (decode: cur_len; train: 0).
+    Memory: O(B*T*Hq*chunk) per step instead of O(B*T*Hq*S).
+    """
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]               # may differ from hd (e.g. MLA)
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    nc = max(1, S // chunk)
+    assert S % nc == 0
+    ck = S // nc
+
+    qf = q.astype(compute_dtype).reshape(B, T, Hkv, G, hd)
+    kc = k.astype(compute_dtype).reshape(B, nc, ck, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.astype(compute_dtype).reshape(B, nc, ck, Hkv, hdv).transpose(1, 0, 2, 3, 4)
+
+    rows = q_offset + jnp.arange(T, dtype=jnp.int32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bthgd,bchd->bthgc", qf, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            cols = ci * ck + jnp.arange(ck, dtype=jnp.int32)
+            mask = rows[:, None] >= cols[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bthgc,bchd->bthgd", p.astype(compute_dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, T, Hkv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, T, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, T, Hkv, G, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc, vc, jnp.arange(nc, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, T, Hq, hdv).astype(q.dtype)
+
+
+def sdpa(cfg, q, k, v, *, causal: bool, q_offset=0):
+    """Dispatch attention impl.  q: [B,T,Hq,hd]; k,v: [B,S,Hkv,hd]."""
+    S = k.shape[1]
+    if cfg.attn_impl == "pallas":
+        from ..kernels import ops
+        o = ops.mha(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), causal=causal)
+        return o.transpose(0, 2, 1, 3)
+    cdt = jnp.float32 if getattr(cfg, "attn_f32", True) else dt_of(cfg)
+    base = getattr(cfg, "attn_chunk", 1024)
+    if S <= 2 * base:
+        # small-S direct path
+        return _attn_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                             chunk=S, compute_dtype=cdt)
+    chunk = base if S % base == 0 else 512 if S % 512 == 0 else S
+    return _attn_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                         chunk=chunk, compute_dtype=cdt)
+
+
+# -- GQA attention block ----------------------------------------------------------
+
+def init_attn(cfg, key):
+    d, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, Hq * hd)),
+        "wk": dense_init(ks[1], (d, Hkv * hd)),
+        "wv": dense_init(ks[2], (d, Hkv * hd)),
+        "wo": dense_init(ks[3], (Hq * hd, d), scale=1.0 / math.sqrt(Hq * hd)),
+    }
+
+
+def attention(cfg, p, x, positions, cache=None, cur_len=None):
+    """x: [B,T,d].  cache: {"k","v": [B,Smax,Hkv,hd]} or None.
+
+    Train/prefill: cache None (or filled and returned).  Decode: T is the new
+    token count (usually 1); cache holds cur_len valid entries."""
+    B, T, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    cdt = dt_of(cfg)
+    q = (x @ wp(p, "wq", cdt)).reshape(B, T, Hq, hd)
+    k = (x @ wp(p, "wk", cdt)).reshape(B, T, Hkv, hd)
+    v = (x @ wp(p, "wv", cdt)).reshape(B, T, Hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        o = sdpa(cfg, q, k, v, causal=True)
+        new_cache = None
+    else:
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cur_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cur_len, 0, 0))
+        Smax = ck.shape[1]
+        # mask out slots beyond cur_len+T via position-aware causal mask
+        if getattr(cfg, "decode_attn", "gather") == "sp":
+            o = _attn_decode_sp(cfg, q, ck.astype(cdt), cv.astype(cdt),
+                                cur_len + T)
+        else:
+            o = _attn_masked_decode(q, ck.astype(cdt), cv.astype(cdt),
+                                    cur_len + T)
+        new_cache = {"k": ck, "v": cv}
+    o = o.reshape(B, T, Hq * hd)
+    return o @ wp(p, "wo", cdt), new_cache
+
+
+def _attn_masked_decode(q, k, v, valid_len):
+    """Decode attention: q [B,T,Hq,hd] over cache k/v [B,Smax,Hkv,hd], only
+    the first valid_len cache slots participate (chunked over S)."""
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    chunk = 1024 if S % 1024 == 0 else S
+    nc = S // chunk
+    qf = q.astype(jnp.float32).reshape(B, T, Hkv, G, hd)
+    kc = k.astype(jnp.float32).reshape(B, nc, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, nc, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bthgd,bchd->bthgc", qf, kb) * scale
+        cols = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.where((cols < valid_len)[None, None, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p_, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bthgc,bchd->bthgd", p_, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, T, Hkv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, T, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, T, Hkv, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nc, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, T, Hq, hd).astype(q.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"wg": dense_init(ks[0], (d, ff)),
+                "wu": dense_init(ks[1], (d, ff)),
+                "wd": dense_init(ks[2], (ff, d), scale=1.0 / math.sqrt(ff))}
+    return {"wu": dense_init(ks[0], (d, ff)),
+            "wd": dense_init(ks[1], (ff, d), scale=1.0 / math.sqrt(ff))}
+
+
+def mlp(cfg, p, x):
+    cdt = dt_of(cfg)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ wp(p, "wg", cdt)) * (x @ wp(p, "wu", cdt))
+    else:
+        h = jax.nn.gelu(x @ wp(p, "wu", cdt))
+    return h @ wp(p, "wd", cdt)
+
+
+# -- embeddings ---------------------------------------------------------------------
+
+def init_embed(cfg, key):
+    e = {"tok": dense_init(key, (cfg.vocab_size, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        e["head"] = dense_init(jax.random.fold_in(key, 1),
+                               (cfg.d_model, cfg.vocab_size))
+    return e
+
+
+def embed(cfg, p, tokens):
+    return p["tok"].astype(dt_of(cfg))[tokens]
+
+
+def unembed(cfg, p, x):
+    from ..distributed.sharding import use_param
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    out = x @ use_param(w.astype(dt_of(cfg)))
+    return out.astype(jnp.float32) if getattr(cfg, "logits_fp32", True) else out
+
+
+def _attn_decode_sp(cfg, q, k, v, valid_len):
+    """Flash-decoding: attention over a sequence-sharded KV cache without
+    gathering it.  Each model-axis shard computes partial (m, l, acc) over its
+    local cache slice; the partials merge with a log-sum-exp psum — the cache
+    never moves, only [B,T,H]-sized stats do.  Falls back to the gather path
+    when no mesh/axis applies."""
+    from ..distributed.sharding import ambient_mesh
+    from jax.sharding import PartitionSpec as P
+    mesh = ambient_mesh()
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    if (mesh is None or "model" not in mesh.axis_names
+            or S % mesh.shape["model"] != 0):
+        return _attn_masked_decode(q, k, v, valid_len)
+    import numpy as np
+    bnames = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = int(np.prod([mesh.shape[n] for n in bnames])) if bnames else 1
+    bspec = bnames if (bnames and B % bsize == 0) else None
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    S_loc = S // mesh.shape["model"]
+
+    def local(qb, kb, vb, vlen):
+        base = jax.lax.axis_index("model") * S_loc
+        qf = qb.astype(jnp.float32).reshape(qb.shape[0], T, Hkv, G, hd)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        s = jnp.einsum("bthgd,bshd->bthgs", qf, kf) * scale
+        cols = base + jnp.arange(S_loc, dtype=jnp.int32)
+        s = jnp.where((cols < vlen)[None, None, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bthgs,bshd->bthgd", p, vf)
+        # merge partials across the sequence shards
+        M = jax.lax.pmax(m, "model")
+        w = jnp.exp(m - M)
+        l_g = jax.lax.psum(l * w, "model")
+        acc_g = jax.lax.psum(acc * w[..., None], "model")
+        out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(qb.shape[0], T, Hq, hd).astype(qb.dtype)
+
+    from ..core.engine import _shard_map  # reuse the version-compat wrapper
+    fn = _shard_map(
+        local, mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None), P()),
+        out_specs=P(bspec, None, None, None))
+    return fn(q, k, v, valid_len)

@@ -1,0 +1,108 @@
+"""Mamba-2 block (SSD) — used by the zamba2 hybrid.
+
+Train/prefill use the chunkwise-parallel SSD form (kernels/ssd_scan.py on TPU,
+pure-jnp mirror here for the dry-run path); decode uses the O(1) per-step
+recurrence.  State = (conv window, SSM state h [B,H,N,P]) — constant in
+sequence length, which is what qualifies the hybrid for long_500k.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import dense_init, dt_of, init_norm, norm
+
+
+def init_mamba_block(cfg, key):
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * N
+    return {
+        "ln": init_norm(d, cfg.norm),
+        "win": dense_init(ks[0], (d, 2 * di + 2 * N + H)),
+        "conv": dense_init(ks[1], (cfg.ssm_conv, conv_ch), scale=0.5),
+        "a_log": jnp.zeros((H,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "dskip": jnp.ones((H,), jnp.float32),
+        "out_norm": init_norm(di, "rms"),
+        "wout": dense_init(ks[2], (di, d), scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv over time.  x: [B,T,C]; w: [W,C].
+
+    state: [B, W-1, C] previous inputs (decode) or None (train, zero-pad).
+    Returns (y [B,T,C], new_state [B, W-1, C])."""
+    B, T, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # [B, T+W-1, C]
+    y = sum(xp[:, i:i + T, :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y, new_state
+
+
+def ssd_final_state(x, dt, A, B):
+    """SSM state after a full sequence: h_T = Σ_j exp(Σ_{k>j} A·dt_k) dt_j B_j x_j^T.
+
+    x: [b,T,H,P]; dt: [b,T,H]; A: [H]; B: [b,T,N] → h [b,H,N,P]."""
+    l = jnp.cumsum(A[None, None, :] * dt, axis=1)        # [b,T,H] inclusive
+    w = jnp.exp(l[:, -1:, :] - l) * dt                   # [b,T,H]
+    return jnp.einsum("bth,btn,bthp->bhnp", w.astype(jnp.float32),
+                      B.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def mamba_apply(cfg, p, x, state=None, decode=False):
+    """x: [B,T,d].  state: {"conv": [B,W-1,C], "h": [B,H,N,P]} or None."""
+    B, T, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cdt = dt_of(cfg)
+    hloc = norm(p["ln"], x, cfg.norm, cfg.norm_eps)
+    proj = hloc @ p["win"].astype(cdt)
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt_raw = proj[..., -H:]
+
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv"].astype(cdt), conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :di].reshape(B, T, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+
+    if decode:
+        h = state["h"]
+        decay = jnp.exp(A[None, :] * dt[:, 0])                     # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(cdt)                                 # [B,1,H,P]
+        new_h = h
+    else:
+        use_pallas = cfg.attn_impl == "pallas"
+        y = ops.ssd(xs, dt.astype(jnp.float32), A, Bm.astype(jnp.float32),
+                    Cm.astype(jnp.float32), chunk=cfg.ssd_chunk,
+                    use_pallas=use_pallas).astype(cdt)
+        new_h = ssd_final_state(xs, dt, A, Bm) if state is not None else None
+
+    y = y + xs.astype(cdt) * p["dskip"].astype(cdt)[None, None, :, None]
+    y = y.reshape(B, T, di)
+    y = norm(p["out_norm"], y, "rms", cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = x + y @ p["wout"].astype(cdt)
+    new_state = None if state is None and not decode else \
+        {"conv": new_conv, "h": new_h}
+    return out, new_state

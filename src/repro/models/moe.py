@@ -1,0 +1,180 @@
+"""Mixture-of-Experts layers (Kimi-K2 / DeepSeek-V2 style) and MLA attention.
+
+MoE dispatch is the production sort-based capacity scheme (not the dense
+one-hot einsum, which cannot scale to 384 experts x 1M tokens):
+
+  top-k -> flatten (token, slot) -> sort by expert -> rank-in-group (prefix
+  sums — the same lock-free slot assignment idea as the PDES calendar insert,
+  see core/calendar.py) -> capacity-capped scatter into an [E, cap, d] expert
+  buffer -> batched expert matmuls -> weighted combine-scatter back.
+
+Sharding: the expert buffer carries a sharding constraint P("expert"-ish on
+the E axis, "data" on the capacity axis); under pjit/GSPMD the token->expert
+scatter then lowers to the expert-parallel all-to-all.
+
+MLA (DeepSeek): KV is compressed to a kv_lora_rank latent + a shared RoPE key.
+Prefill expands the latent to per-head K/V (cheap at T==S); decode uses the
+*absorbed* form — scores and context are computed entirely in latent space, so
+the cache is [S, r + rope_dim] instead of [S, H, 2*hd] (the paper's ~10x KV
+saving, and the reason decode_32k x batch 128 fits).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dt_of, rope
+
+
+# -- MoE FFN -------------------------------------------------------------------
+
+def init_moe(cfg, key):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), scale=0.02),
+        "wg": dense_init(ks[1], (E, d, ff)),
+        "wu": dense_init(ks[2], (E, d, ff)),
+        "wd": dense_init(ks[3], (E, ff, d), scale=1.0 / math.sqrt(ff)),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.moe_d_ff * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {"wg": dense_init(kss[0], (d, sf)),
+                       "wu": dense_init(kss[1], (d, sf)),
+                       "wd": dense_init(kss[2], (sf, d),
+                                        scale=1.0 / math.sqrt(sf))}
+    return p
+
+
+def _group_ranks(key, n_groups):
+    order = jnp.argsort(key, stable=True)
+    ks = key[order]
+    idx = jnp.arange(key.shape[0], dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    return order, ks, idx - start
+
+
+def moe_ffn(cfg, p, x, mesh_axes=("model", "data")):
+    """x: [B, T, d] -> [B, T, d] via top-k routed experts + shared experts."""
+    from jax.sharding import PartitionSpec as P
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    cdt = dt_of(cfg)
+    Tt = B * T
+    xf = x.reshape(Tt, d)
+
+    logits = (xf @ p["router"].astype(cdt)).astype(jnp.float32)   # [Tt, E]
+    gate, idx = jax.lax.top_k(logits, k)                          # [Tt, k]
+    gate = jax.nn.softmax(gate, axis=-1).astype(cdt)
+
+    slot_expert = idx.reshape(-1).astype(jnp.int32)               # [Tt*k]
+    slot_token = jnp.repeat(jnp.arange(Tt, dtype=jnp.int32), k)
+    slot_gate = gate.reshape(-1)
+
+    cap = max(128, int(math.ceil(cfg.capacity_factor * Tt * k / E / 128)) * 128)
+    order, ks_sorted, rank = _group_ranks(slot_expert, E)
+    keep = rank < cap
+    pos = jnp.where(keep, ks_sorted * cap + rank, E * cap)
+
+    buf = jnp.zeros((E * cap, d), cdt).at[pos].set(
+        xf[slot_token[order]], mode="drop").reshape(E, cap, d)
+    from ..distributed.sharding import maybe_constraint
+    layout = getattr(cfg, "moe_buf_layout", "md")
+    if layout == "md":
+        buf = maybe_constraint(buf, "model", "data", None)
+    elif layout == "m":
+        buf = maybe_constraint(buf, "model", None, None)
+    # "none": let GSPMD propagate freely
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(cdt))) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(cdt))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(cdt))
+
+    contrib = out_buf.reshape(E * cap, d)[jnp.clip(pos, 0, E * cap - 1)]
+    contrib = contrib * (slot_gate[order] * keep.astype(cdt))[:, None]
+    y = jnp.zeros((Tt, d), cdt).at[slot_token[order]].add(contrib)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xf @ sp["wg"].astype(cdt)) * (xf @ sp["wu"].astype(cdt))
+        y = y + hs @ sp["wd"].astype(cdt)
+    return y.reshape(B, T, d)
+
+
+def aux_load_balance_loss(cfg, router_logits):
+    """Switch-style load-balance auxiliary (per layer, averaged by caller)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    E = probs.shape[-1]
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac * imp)
+
+
+# -- MLA attention -----------------------------------------------------------------
+
+def init_mla(cfg, key):
+    d, Hq, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, Hq * (hd + rd))),
+        "wdkv": dense_init(ks[1], (d, r)),
+        "wkr": dense_init(ks[2], (d, rd)),
+        "wukv": dense_init(ks[3], (r, Hq * 2 * hd)),
+        "wo": dense_init(ks[4], (Hq * hd, d), scale=1.0 / math.sqrt(Hq * hd)),
+    }
+
+
+def mla_attention(cfg, p, x, positions, cache=None, cur_len=None):
+    B, T, d = x.shape
+    Hq, hd = cfg.n_heads, cfg.hd
+    r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    cdt = dt_of(cfg)
+    scale = 1.0 / math.sqrt(hd + rd)
+
+    q = (x @ p["wq"].astype(cdt)).reshape(B, T, Hq, hd + rd)
+    qn, qr = q[..., :hd], rope(q[..., hd:], positions, cfg.rope_theta)
+    ckv = x @ p["wdkv"].astype(cdt)                                # [B,T,r]
+    kr = rope((x @ p["wkr"].astype(cdt))[:, :, None, :], positions,
+              cfg.rope_theta)[:, :, 0, :]                          # [B,T,rd]
+
+    wukv = p["wukv"].astype(cdt).reshape(r, Hq, 2 * hd)
+    wuk, wuv = wukv[..., :hd], wukv[..., hd:]
+
+    if cache is None:
+        # prefill/train: expand latent to per-head K/V, chunked causal attn.
+        kn = jnp.einsum("btr,rhd->bthd", ckv, wuk)
+        v = jnp.einsum("btr,rhd->bthd", ckv, wuv)
+        kfull = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr[:, :, None, :], (B, T, Hq, rd))], axis=-1)
+        qfull = jnp.concatenate([qn, qr], axis=-1)
+        from .layers import _attn_chunked
+        o = _attn_chunked(qfull, kfull, v, causal=True, q_offset=0,
+                          chunk=min(1024, T))
+        # note: _attn_chunked rescales by 1/sqrt(hd+rd) internally via hd of
+        # its q — which is (hd+rd) here, matching `scale`.
+        new_cache = None
+    else:
+        cckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(
+            cache["ckv"].dtype), (0, cur_len, 0))
+        ckr = jax.lax.dynamic_update_slice(cache["kr"], kr.astype(
+            cache["kr"].dtype), (0, cur_len, 0))
+        S = cckv.shape[1]
+        # absorbed decode: all in latent space.
+        q_abs = jnp.einsum("bthd,rhd->bthr", qn, wuk)              # [B,T,H,r]
+        s = (jnp.einsum("bthr,bsr->bths", q_abs, cckv.astype(cdt))
+             + jnp.einsum("bthp,bsp->bths", qr, ckr.astype(cdt))) * scale
+        cols = jnp.arange(S, dtype=jnp.int32)
+        s = jnp.where((cols < cur_len + T)[None, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(cdt)
+        ctx = jnp.einsum("bths,bsr->bthr", w, cckv.astype(cdt))
+        o = jnp.einsum("bthr,rhd->bthd", ctx, wuv)
+        new_cache = {"ckv": cckv, "kr": ckr}
+
+    o = o.reshape(B, T, Hq * hd)
+    return o @ p["wo"].astype(cdt), new_cache

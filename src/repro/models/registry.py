@@ -1,0 +1,16 @@
+"""Model registry: ModelConfig.family → model implementation."""
+from __future__ import annotations
+
+from .transformer import DecoderLM
+from .xlstm import XLSTM
+from .zamba import Zamba
+
+
+def build_model(cfg):
+    if cfg.family in ("dense", "moe"):
+        return DecoderLM(cfg)
+    if cfg.family == "xlstm":
+        return XLSTM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

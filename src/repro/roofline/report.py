@@ -1,0 +1,108 @@
+"""Build the §Roofline table from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.roofline.report [--mesh single] [--md out.md]
+
+Per cell: the three roofline terms (seconds), dominant bottleneck, MODEL_FLOPS
+ratio, roofline fraction, and a what-would-move-it note.  jaxpr FLOP counts
+are cached under artifacts/roofline/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from ..configs.base import SHAPES
+from ..configs.registry import get_config
+from . import analysis
+
+
+def _note(row: dict, rec: dict, cfg) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_flops_ratio"] < 0.5:
+            return ("compute-bound with low useful-FLOP ratio: cut remat "
+                    "recompute (remat='dots') / avoid duplicated expert math")
+        return "compute-bound near useful peak: only faster kernels help"
+    if d == "memory":
+        return ("HBM-bound: shrink cache/activation dtype (bf16/f8), fuse "
+                "reads, or raise arithmetic intensity (larger per-chip tiles)")
+    return ("collective-bound: reshard to cut per-layer all-gathers, overlap "
+            "collectives with compute, or move traffic off the layer loop")
+
+
+def cell_flops(arch: str, shape: str, cache_dir: Path) -> float:
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    f = cache_dir / f"flops__{arch}__{shape}.json"
+    if f.exists():
+        return json.loads(f.read_text())["flops"]
+    val = analysis.count_cell_flops(arch, shape)
+    f.write_text(json.dumps({"flops": val}))
+    return val
+
+
+def build_rows(artifact_dir: Path, mesh: str, cache_dir: Path):
+    rows = []
+    for path in sorted(artifact_dir.glob(f"*__{mesh}.json")):
+        rec = json.loads(path.read_text())
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] != "ok":
+            rows.append({"arch": arch, "shape": shape,
+                         "status": rec["status"],
+                         "note": rec.get("skip_reason", rec.get("error", ""))})
+            continue
+        cfg = get_config(arch)
+        flops = cell_flops(arch, shape, cache_dir)
+        rec["analytic_memory_floor"] = analysis.analytic_memory_floor(arch,
+                                                                      shape)
+        trip = cfg.n_layers if cfg.scan_layers and cfg.family in (
+            "dense", "moe") else 1
+        mf = analysis.model_flops_for(arch, shape)
+        row = analysis.roofline_row(rec, flops_global=flops,
+                                    chips=rec["n_devices"], trip=trip,
+                                    model_flops=mf, kind=SHAPES[shape].kind)
+        row.update({"arch": arch, "shape": shape, "status": "ok",
+                    "compile_s": rec.get("compile_s")})
+        row["note"] = _note(row, rec, cfg)
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows, mesh: str) -> str:
+    out = [f"### Roofline — {mesh}-pod mesh\n",
+           "| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful-FLOP ratio | roofline frac | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — | {r.get('note','')[:80]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['note'][:90]} |")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    rows = build_rows(Path(args.artifacts), args.mesh,
+                      Path("artifacts/roofline"))
+    md = to_markdown(rows, args.mesh)
+    print(md)
+    if args.md:
+        Path(args.md).write_text(md)
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Roofline row for a hillclimb variant artifact.
+
+  PYTHONPATH=src python -m repro.roofline.variant artifacts/dryrun/<cell>.json
+"""
+import json
+import sys
+from pathlib import Path
+
+from ..configs.registry import get_config
+from . import analysis
+
+
+def row_for(path: str) -> dict:
+    rec = json.loads(Path(path).read_text())
+    arch, shape = rec["arch"], rec["shape"]
+    overrides = rec.get("overrides")
+    flops = analysis.count_cell_flops(arch, shape, overrides=overrides)
+    rec["analytic_memory_floor"] = analysis.analytic_memory_floor(arch, shape)
+    cfg = get_config(arch)
+    trip = cfg.n_layers
+    mf = analysis.model_flops_for(arch, shape)
+    from ..configs.base import SHAPES
+    row = analysis.roofline_row(rec, flops_global=flops,
+                                chips=rec["n_devices"], trip=trip,
+                                model_flops=mf, kind=SHAPES[shape].kind)
+    row.update({"arch": arch, "shape": shape,
+                "variant": Path(path).stem.split("__")[-1],
+                "overrides": overrides})
+    return row
+
+
+def main():
+    for path in sys.argv[1:]:
+        r = row_for(path)
+        print(f"{r['arch']} x {r['shape']} [{r['variant']}]")
+        print(f"  compute {r['compute_s']:.4f}s  memory {r['memory_s']:.4f}s  "
+              f"collective {r['collective_s']:.4f}s  -> {r['dominant']}")
+        print(f"  useful-FLOP ratio {r['useful_flops_ratio']:.3f}  "
+              f"roofline fraction {r['roofline_fraction']:.4f}")
+        print(f"  collectives: "
+              + ", ".join(f"{k}={v/1e9:.1f}GB"
+                          for k, v in r["collectives_scaled"].items()
+                          if k != "total" and v > 0))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see exactly 1 device (the dry-run sets its own 512-device flag in
+# its own process); never set XLA_FLAGS globally here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

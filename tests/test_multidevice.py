@@ -1,0 +1,56 @@
+"""Multi-device engine equivalence, run in a subprocess with 8 host devices
+(device count is locked at first JAX init, so the flag must be per-process —
+the main test process keeps 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.phold.model import Phold, PholdParams
+    from repro.core.engine import ParsirEngine, EngineConfig, AXIS
+    from repro.core.ref_engine import run_sequential
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    p = PholdParams(n_objects=32, initial_events=4, state_nodes=64,
+                    realloc_fraction=0.02, lookahead=0.5, dist="dyadic")
+    model = Phold(p)
+    n_epochs = 20
+    ref = run_sequential(model, n_epochs, 0.5)
+    ref_pay = np.stack([s["payload"] for s in ref.obj_state])
+    ref_top = np.array([s["top"] for s in ref.obj_state])
+
+    for route, steal in (("allgather", False), ("a2a", False),
+                         ("allgather", True), ("a2a", True)):
+        cfg = EngineConfig(lookahead=0.5, n_buckets=8, bucket_cap=64,
+                           route_cap=512, fallback_cap=512, route=route,
+                           steal=steal, steal_cap=2, claim_cap=4)
+        eng = ParsirEngine(model, cfg, mesh=mesh)
+        st = eng.run(eng.init(), n_epochs)
+        tot = eng.totals(st)
+        assert tot["processed"] == ref.total_processed, (route, steal, tot)
+        assert tot["cal_overflow"] == 0 and tot["late_events"] == 0
+        assert tot["route_overflow"] == 0 and tot["lookahead_violations"] == 0
+        assert np.array_equal(np.asarray(st.obj["payload"]), ref_pay)
+        assert np.array_equal(np.asarray(st.obj["top"]), ref_top)
+        if steal:
+            assert tot["stolen"] > 0, "stealing never engaged"
+        print("OK", route, steal, tot["processed"], tot["stolen"])
+    print("PASS")
+""")
+
+
+@pytest.mark.slow
+def test_eight_device_engine_equivalence():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "PASS" in r.stdout

@@ -1,0 +1,120 @@
+"""Hypothesis property tests for the system invariants:
+
+* calendar insert/extract conserves events and never reorders per object;
+* the arena stack allocator keeps the free-region invariant and LIFO reuse;
+* placement is a partition (every object owned by exactly one device);
+* the loan planner never over-assigns receivers and is donor/receiver disjoint.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core.calendar import extract_sorted, insert, make_calendar
+from repro.core.placement import equal_placement, weighted_placement
+from repro.core.stealing import plan_loans
+from repro.phold import arena as ar
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.tuples(st.integers(0, 7),          # local obj
+                          st.integers(0, 3),          # epoch
+                          st.floats(0.0, 3.75, width=32),
+                          st.integers(0, 2**32 - 1)),
+                min_size=1, max_size=40))
+def test_calendar_conserves_and_orders(events):
+    cal = make_calendar(n_local=8, n_buckets=4, cap=64)
+    li = jnp.asarray([e[0] for e in events], jnp.int32)
+    ep = jnp.asarray([e[1] for e in events], jnp.int32)
+    ts = jnp.asarray([e[1] + (e[2] % 1.0) for e in events], jnp.float32)
+    seed = jnp.asarray([e[3] for e in events], jnp.uint32)
+    pay = jnp.zeros((len(events),), jnp.float32)
+    valid = jnp.ones((len(events),), bool)
+    cal, ovf = insert(cal, li, ep, ts, seed, pay, valid)
+    assert int(ovf) == 0
+    assert int(cal.cnt.sum()) == len(events)
+
+    seen = 0
+    for epoch in range(4):
+        cal, ts_s, seed_s, _, cnt = extract_sorted(cal, jnp.int32(epoch))
+        cnt = np.asarray(cnt)
+        ts_np = np.asarray(ts_s)
+        for o in range(8):
+            k = int(cnt[o])
+            if k:
+                row = ts_np[o, :k]
+                assert np.all(np.diff(row) >= 0), "per-object ts order violated"
+            seen += k
+    assert seen == len(events)
+
+
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=16, unique=True))
+def test_arena_free_then_alloc_is_lifo(idxs):
+    a = ar.arena_init(64)
+    idx = jnp.asarray(idxs, jnp.int32)
+    a = ar.free_k(a, idx)
+    assert int(a.top) == 64 - len(idxs)
+    a, got = ar.alloc_k(a, len(idxs))
+    assert int(a.top) == 64
+    # LIFO: allocation returns exactly the freed set
+    assert sorted(np.asarray(got).tolist()) == sorted(idxs)
+    # numpy mirror agrees element-for-element
+    addr_np, top_np = ar.arena_init_np(64)
+    addr_np, top_np = ar.free_k_np(addr_np, top_np, np.asarray(idxs))
+    addr_np, top_np, got_np = ar.alloc_k_np(addr_np, top_np, len(idxs))
+    np.testing.assert_array_equal(np.asarray(got), got_np)
+
+
+@given(st.integers(1, 512), st.integers(1, 16))
+def test_equal_placement_is_partition(n_objects, n_devices):
+    p = equal_placement(n_objects, n_devices)
+    counts = p.counts()
+    assert counts.sum() == n_objects
+    assert counts.max() - counts.min() <= 1
+    owners = p.owner_np(np.arange(n_objects))
+    assert owners.min() >= 0 and owners.max() < n_devices
+    for d in range(n_devices):
+        lo, hi = p.range_of(d)
+        assert np.all(owners[lo:hi] == d)
+
+
+@given(st.lists(st.floats(0.01, 100.0), min_size=4, max_size=64),
+       st.integers(1, 8))
+def test_weighted_placement_partitions(weights, n_devices):
+    p = weighted_placement(weights, n_devices)
+    assert p.counts().sum() == len(weights)
+    assert np.all(p.counts() >= 0)
+
+
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=8),
+       st.integers(1, 4))
+def test_loan_plan_respects_capacity_and_roles(loads, claim_cap):
+    D = len(loads)
+    steal_cap = 3
+    loads_j = jnp.asarray(loads, jnp.int32)
+    # every device publishes loans of weight 1..3
+    w = jnp.asarray(np.random.default_rng(0).integers(1, 4, (D, steal_cap)),
+                    jnp.int32)
+    valid = jnp.ones((D, steal_cap), bool)
+    plan = plan_loans(loads_j, w, valid, claim_cap)
+    assignee = np.asarray(plan.assignee)
+    claimed = np.asarray(plan.claimed)
+    total = sum(loads)
+    target = -(-total // D)
+    deficit = np.maximum(0, target - np.asarray(loads))
+    for r in range(D):
+        got = claimed & (assignee == r)
+        assert got.sum() <= claim_cap
+        if deficit[r] == 0:
+            assert got.sum() == 0, "zero-deficit device received loans"
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 31))
+def test_rng_jax_numpy_bit_identical(seed, k):
+    a = int(ev.fold(jnp.uint32(seed), k))
+    b = int(ev.fold_np(np.uint32(seed), k))
+    assert a == b
+    assert float(ev.dyadic10(jnp.uint32(seed))) == float(ev.dyadic10_np(np.uint32(seed)))
+    assert float(ev.uniform24(jnp.uint32(seed))) == float(ev.uniform24_np(np.uint32(seed)))
