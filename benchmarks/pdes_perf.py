@@ -5,7 +5,12 @@ reports, for each routing strategy, the *structural* per-epoch exchange bytes
 (what the ICI would carry on a pod) — the measurable CPU proxy plus the
 analytic collective term.
 
+``--workload`` selects any registered zoo workload (repro/workloads), so the
+perf trajectory covers skewed traffic (phold-hotspot), FIFO-coupled traffic
+(queueing) and deterministic ring traffic (cluster), not just uniform PHOLD.
+
   PYTHONPATH=src python -m benchmarks.pdes_perf [--devices 8]
+  PYTHONPATH=src python -m benchmarks.pdes_perf --workload phold-hotspot
 """
 from __future__ import annotations
 
@@ -21,18 +26,22 @@ _CHILD = textwrap.dedent("""
     import numpy as np, jax
     from jax.sharding import Mesh
     from repro.core.engine import AXIS, EngineConfig, ParsirEngine
-    from repro.phold.model import Phold, PholdParams
+    from repro.workloads.registry import get_workload
 
     spec = json.loads(sys.argv[1])
     D = spec["devices"]
     mesh = Mesh(np.array(jax.devices()[:D]), (AXIS,))
-    p = PholdParams(n_objects=spec["o"], initial_events=spec["m"],
-                    state_nodes=spec["s"], realloc_fraction=0.004,
-                    lookahead=spec["la"], dist=spec["dist"],
-                    hot_objects=spec.get("hot_o", 0),
-                    hot_prob=spec.get("hot_p", 0))
-    model = Phold(p)
-    cfg = EngineConfig(lookahead=p.lookahead,
+    wname = spec.get("workload", "phold")
+    model_kw = dict(n_objects=spec["o"], lookahead=spec["la"],
+                    dist=spec["dist"], **spec.get("model_kw", {}))
+    if wname in ("phold", "phold-hotspot"):
+        model_kw.update(initial_events=spec["m"], state_nodes=spec["s"],
+                        realloc_fraction=0.004)
+    if wname == "phold":
+        model_kw.update(hot_objects=spec.get("hot_o", 0),
+                        hot_prob=spec.get("hot_p", 0))
+    model = get_workload(wname, **model_kw)
+    cfg = EngineConfig(lookahead=spec["la"],
                        epoch_len=spec.get("epoch_len"),
                        n_buckets=32, bucket_cap=spec.get("bucket_cap", 256),
                        route_cap=spec["route_cap"], fallback_cap=16384,
@@ -57,7 +66,9 @@ _CHILD = textwrap.dedent("""
     else:
         ex = D * spec["route_cap"] * rec_b              # pairwise a2a
     if spec.get("steal"):
-        state_b = p.state_nodes * (p.lanes * 4 + 4) + 8
+        # per-object state bytes, generic over workloads: one object's pytree.
+        st0 = model.init_object_state(np.arange(1))
+        state_b = sum(np.asarray(l).nbytes for l in jax.tree.leaves(st0)) + 8
         loan_b = 8 * (cfg.bucket_cap * 12 + state_b)
         ex += 2 * D * D * loan_b                        # publish + return
     print(json.dumps({"ev_s": n / dt, "n": n, "dt": dt, "stats": tot,
@@ -67,9 +78,19 @@ _CHILD = textwrap.dedent("""
 BASE = dict(o=512, m=40, s=256, la=0.5, dist="exponential", route_cap=8192,
             epochs=30)
 
+# workload-specific bench-scale extras forwarded to make().
+BENCH_MODEL_KW = {
+    # at bench scale, spread the hot set so per-object batches fit bucket_cap
+    # (same skew point as the uniform-phold skew ladder rows).
+    "phold-hotspot": dict(hot_objects=32, hot_prob=96, hot_boost=1),
+    "queueing": dict(n_jobs=2048),
+    "cluster": dict(n_rings=64),
+}
 
-def run_child(devices: int, **spec):
-    merged = dict(BASE, devices=devices, **spec)
+
+def run_child(devices: int, workload: str, **spec):
+    merged = dict(BASE, devices=devices, workload=workload,
+                  model_kw=BENCH_MODEL_KW.get(workload, {}), **spec)
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = "src"
@@ -80,28 +101,47 @@ def run_child(devices: int, **spec):
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--out", default="artifacts/pdes_perf.json")
-    args = ap.parse_args()
-    D = args.devices
-
+def build_ladder(workload: str):
     ladder = [
         ("baseline_paper_faithful", dict(route="allgather")),
         ("it1_route_a2a", dict(route="a2a")),
         ("it2_epoch_half_L", dict(route="a2a", epoch_len=0.25)),
-        ("skew_baseline_nosteal", dict(route="a2a", hot_o=32, hot_p=96,
-                                       bucket_cap=512)),
-        ("skew_it3_steal", dict(route="a2a", hot_o=32, hot_p=96,
-                                bucket_cap=512, steal=True)),
-        ("ltf_reference_scheduler", dict(route="a2a", sched="ltf", epochs=10,
-                                         warm=2)),
     ]
+    if workload == "phold":
+        # uniform PHOLD needs explicit hot params to produce skew.
+        ladder += [
+            ("skew_baseline_nosteal", dict(route="a2a", hot_o=32, hot_p=96,
+                                           bucket_cap=512)),
+            ("skew_it3_steal", dict(route="a2a", hot_o=32, hot_p=96,
+                                    bucket_cap=512, steal=True)),
+        ]
+    else:
+        # phold-hotspot is skewed by construction; queueing/cluster measure
+        # the stealing overhead on their native (im)balance.
+        ladder += [
+            ("steal_off", dict(route="a2a", bucket_cap=512)),
+            ("steal_on", dict(route="a2a", bucket_cap=512, steal=True)),
+        ]
+    ladder.append(("ltf_reference_scheduler",
+                   dict(route="a2a", sched="ltf", epochs=10, warm=2)))
+    return ladder
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--workload", default="phold",
+                    help="registered zoo workload (repro/workloads)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    D = args.devices
+    out = args.out or (f"artifacts/pdes_perf.json" if args.workload == "phold"
+                       else f"artifacts/pdes_perf_{args.workload}.json")
+
     results = {}
-    for name, spec in ladder:
-        print(f"[pdes_perf] {name}...", flush=True)
-        results[name] = run_child(D, **spec)
+    for name, spec in build_ladder(args.workload):
+        print(f"[pdes_perf:{args.workload}] {name}...", flush=True)
+        results[name] = run_child(D, args.workload, **spec)
         r = results[name]
         if "error" in r:
             print(f"  ERROR {r['error']}")
@@ -111,9 +151,10 @@ def main():
             print(f"  {r['ev_s']:,.0f} ev/s  "
                   f"exchange {r['exchange_bytes_per_epoch']/1e6:.2f} MB/epoch "
                   f"stolen={r['stats']['stolen']} clean={clean}")
-    with open(args.out, "w") as f:
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
         json.dump(results, f, indent=1)
-    print(f"[pdes_perf] wrote {args.out}")
+    print(f"[pdes_perf] wrote {out}")
 
 
 if __name__ == "__main__":

@@ -1,90 +1,25 @@
 """Cluster simulator: use the PARSIR core to simulate a multi-pod training
 fleet (the PARADISE++-style use-case from the paper's related work).
 
-Model: ``n_nodes`` workers run synchronous data-parallel training as a token
-ring (the token models the allreduce dependency).  Each hop costs a step time
-drawn from the event seed; with probability ~p_fail the hop instead suffers a
-failure + restart delay.  The simulation measures achieved steps/hour vs the
-failure rate — the quantity that sizes checkpoint intervals on a real fleet.
-
-This is a SECOND SimModel (beyond PHOLD) demonstrating that the engine API is
-model-agnostic: ScheduleNewEvent ≅ returned EmittedEvents, ProcessEvent ≅
-process_event.
+The model itself now lives in the workload zoo
+(:mod:`repro.workloads.cluster` — with a numpy oracle mirror and conformance
+coverage); this example keeps the fleet-sizing experiment: measure achieved
+steps/hour vs node failure rate, the quantity that sizes checkpoint
+intervals on a real fleet.
 
   PYTHONPATH=src python examples/cluster_sim.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import events as ev
-from repro.core.api import EmittedEvents, SimModel
 from repro.core.engine import EngineConfig, ParsirEngine
-
-
-class ClusterModel(SimModel):
-    """Objects = worker nodes in a ring; one token event per ring."""
-
-    max_out = 1
-
-    def __init__(self, n_nodes=64, n_rings=8, step_time=1.0, fail_ppm=20000,
-                 restart_time=25.0, lookahead=0.5):
-        self._n = n_nodes
-        self.n_rings = n_rings
-        self.step_time = step_time
-        self.fail_ppm = fail_ppm          # failures per million hops
-        self.restart_time = restart_time
-        self.lookahead = lookahead
-
-    @property
-    def n_objects(self):
-        return self._n
-
-    def init_object_state(self, global_ids):
-        n = len(global_ids)
-        return {"hops": jnp.zeros((n,), jnp.int32),
-                "failures": jnp.zeros((n,), jnp.int32),
-                "busy_time": jnp.zeros((n,), jnp.float32)}
-
-    def initial_events(self):
-        # n_rings tokens start at evenly spaced nodes
-        starts = (np.arange(self.n_rings) * (self._n // self.n_rings)) \
-            % self._n
-        s0 = ev._mix_np(np.arange(self.n_rings).astype(np.uint32)
-                        ^ np.uint32(0xC1A07E57))
-        return {"dst": starts.astype(np.int32),
-                "ts": np.zeros(self.n_rings, np.float32),
-                "seed": s0,
-                "payload": np.zeros(self.n_rings, np.float32)}
-
-    def process_event(self, state, ts, seed, payload):
-        u = ev.uniform24(ev.fold(seed, 0))
-        fail = (ev.fold(seed, 1) % jnp.uint32(1_000_000)) \
-            < jnp.uint32(self.fail_ppm)
-        hop = jnp.float32(self.lookahead) + jnp.float32(self.step_time) * u
-        delay = jnp.where(fail, hop + jnp.float32(self.restart_time), hop)
-
-        state = {"hops": state["hops"] + 1,
-                 "failures": state["failures"] + fail.astype(jnp.int32),
-                 "busy_time": state["busy_time"] + delay}
-        # forward token to the ring neighbour (dst = self+1 handled globally
-        # by the engine's routing — locality exactly like NUMA-remote enqueue)
-        me = payload.astype(jnp.int32)  # payload carries my id
-        nxt = (me + 1) % self._n
-        out = EmittedEvents(dst=nxt[None], ts=(ts + delay)[None],
-                            seed=ev.fold(seed, 3)[None],
-                            payload=nxt.astype(jnp.float32)[None],
-                            valid=jnp.ones((1,), bool))
-        return state, out
+from repro.workloads.cluster import ClusterModel, ClusterParams
 
 
 def run(fail_ppm, n_epochs=400):
-    model = ClusterModel(n_nodes=64, n_rings=8, fail_ppm=fail_ppm)
-    # seed payload with node ids: patch initial events
-    cfg = EngineConfig(lookahead=model.lookahead, n_buckets=64,
+    model = ClusterModel(ClusterParams(n_nodes=64, n_rings=8,
+                                       fail_ppm=fail_ppm, dist="uniform24"))
+    cfg = EngineConfig(lookahead=model.params.lookahead, n_buckets=64,
                        bucket_cap=32, route_cap=1024, fallback_cap=4096)
-    init = model.initial_events()
-    init["payload"] = init["dst"].astype(np.float32)
-    model.initial_events = lambda: init
     eng = ParsirEngine(model, cfg)
     st = eng.run(eng.init(), n_epochs)
     tot = eng.totals(st)

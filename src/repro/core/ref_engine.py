@@ -19,6 +19,7 @@ class SequentialResult:
     def __init__(self, n_objects: int):
         self.processed_per_object = np.zeros(n_objects, np.int64)
         self.processed_records: list[tuple] = []  # (dst, seed) of processed events
+        self.pending_records: list[tuple] = []    # (dst, seed) still in the heap
         self.obj_state: list[dict] | None = None
 
     @property
@@ -26,8 +27,22 @@ class SequentialResult:
         return int(self.processed_per_object.sum())
 
     def records_sorted(self) -> np.ndarray:
-        rec = np.array(sorted(self.processed_records), dtype=np.uint64)
-        return rec.reshape(-1, 2) if rec.size else rec.reshape(0, 2)
+        return _sorted_rec(self.processed_records)
+
+    def pending_sorted(self) -> np.ndarray:
+        """The multiset of un-processed events at the horizon, sorted.
+
+        Counter-based RNG makes the whole event tree a pure function of the
+        initial seeds, so a parallel run that processed the same *count* of
+        events and left the same *pending* multiset necessarily processed the
+        same record multiset — this is the engine-comparable face of
+        ``processed_records`` (the engine keeps no processed log)."""
+        return _sorted_rec(self.pending_records)
+
+
+def _sorted_rec(records: list[tuple]) -> np.ndarray:
+    rec = np.array(sorted(records), dtype=np.uint64)
+    return rec.reshape(-1, 2) if rec.size else rec.reshape(0, 2)
 
 
 def run_sequential(model: Any, n_epochs: int, epoch_len: float) -> SequentialResult:
@@ -52,5 +67,6 @@ def run_sequential(model: Any, n_epochs: int, epoch_len: float) -> SequentialRes
         heapq.heappush(heap, (np.float32(out["ts"]), int(out["seed"]),
                               int(out["dst"]), np.float32(out["payload"])))
 
+    res.pending_records = [(int(dst), int(seed)) for _, seed, dst, _ in heap]
     res.obj_state = state
     return res

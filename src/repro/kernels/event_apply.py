@@ -95,18 +95,21 @@ def _kernel(ts_ref, seed_ref, cnt_ref,
             delta = _dyadic10(_fold(seed, 5))
 
             # touch: one contiguous VMEM read+write of the hot window.
-            rows = pl.load(payload_out, (0, slice(None), pl.dslice(start, K)))
-            pl.store(payload_out, (0, slice(None), pl.dslice(start, K)),
+            # (leading block dim indexed with dslice(0, 1): bare python ints in
+            # pl.load/pl.store index tuples break interpret-mode discharge.)
+            row0 = pl.dslice(0, 1)
+            rows = pl.load(payload_out, (row0, slice(None), pl.dslice(start, K)))
+            pl.store(payload_out, (row0, slice(None), pl.dslice(start, K)),
                      rows * jnp.float32(0.5) + delta)
 
             # arena: free KR touched nodes then alloc KR (LIFO — stack alloc).
             top = top_out[0]
             top2 = top - KR
             freed = start + KR - 1 - jnp.arange(KR, dtype=jnp.int32)
-            pl.store(addr_out, (0, pl.dslice(top2, KR)), freed)
+            pl.store(addr_out, (row0, pl.dslice(top2, KR)), freed[None])
             initval = _dyadic10(_fold(seed, 6))
-            pl.store(payload_out, (0, slice(None), pl.dslice(start, KR)),
-                     jnp.full((LANES, KR), initval, jnp.float32))
+            pl.store(payload_out, (row0, slice(None), pl.dslice(start, KR)),
+                     jnp.full((1, LANES, KR), initval, jnp.float32))
             # net top unchanged: free KR then alloc KR.
 
             # emit one event (ScheduleNewEvent)

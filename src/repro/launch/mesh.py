@@ -9,16 +9,22 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where this jax version has them
+    (jax <= 0.4.x predates jax.sharding.AxisType; default semantics match)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    kw = {"axis_types": (at.Auto,) * len(axes)} if at is not None else {}
+    return jax.make_mesh(shape, axes, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod (v5e pod slice); 2 pods for the multi-pod run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(n_devices: int | None = None, axis: str = "data"):
     """Small mesh over whatever devices exist (tests, examples)."""
     devs = jax.devices()[:n_devices] if n_devices else jax.devices()
-    return jax.make_mesh((len(devs),), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((len(devs),), (axis,))

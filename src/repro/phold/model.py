@@ -59,25 +59,11 @@ class PholdParams:
 
 
 def _draw(bits, params: PholdParams):
-    if params.dist == "dyadic":
-        return ev.dyadic10(bits)
-    if params.dist == "uniform24":
-        return ev.uniform24(bits) * jnp.float32(params.mean_increment)
-    if params.dist == "exponential":
-        u = ev.uniform24(bits)
-        return -jnp.log1p(-u) * jnp.float32(params.mean_increment)
-    raise ValueError(params.dist)
+    return ev.draw(bits, params.dist, params.mean_increment)
 
 
 def _draw_np(bits, params: PholdParams):
-    if params.dist == "dyadic":
-        return ev.dyadic10_np(bits)
-    if params.dist == "uniform24":
-        return ev.uniform24_np(bits) * np.float32(params.mean_increment)
-    if params.dist == "exponential":
-        u = ev.uniform24_np(bits)
-        return np.float32(-np.log1p(-u)) * np.float32(params.mean_increment)
-    raise ValueError(params.dist)
+    return ev.draw_np(bits, params.dist, params.mean_increment)
 
 
 class Phold(SimModel):

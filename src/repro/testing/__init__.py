@@ -1,0 +1,1 @@
+"""Reusable test harnesses (differential conformance against the oracle)."""

@@ -1,0 +1,219 @@
+"""Differential conformance harness: any workload × any engine config.
+
+The engine's correctness contract (engine.py module docstring) is checked
+against the sequential numpy oracle (:mod:`repro.core.ref_engine`) in four
+parts:
+
+  1. **clean counters** — every overflow/causality/lookahead counter in
+     ``Stats`` is zero (a conservative engine never silently drops/reorders);
+  2. **processed count** — equals the oracle's;
+  3. **pending multiset** — the (dst, seed) multiset still parked in the
+     calendar + fallback equals the oracle's final event heap.  Because all
+     model randomness is counter-based, the full event tree is a pure
+     function of the initial seeds, so (2) + (3) pin down the processed
+     record multiset without the engine keeping a processed log;
+  4. **bit-exact state** — for dyadic workloads the final per-object state
+     pytree matches the oracle bit-for-bit.
+
+``SWEEP`` names the engine-config axes of the zoo: scheduler (batch | ltf),
+routing (allgather | a2a), stealing on/off, per-object batch implementation
+(vmap rounds | Pallas model kernel), and fractional epoch length.
+
+The module doubles as the multi-device driver (device count is locked at
+first JAX init, so multi-device sweeps run in a subprocess)::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+    python -m repro.testing.conformance --workload queueing --devices 4 \\
+        --configs batch-a2a,steal-allgather,steal-a2a
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any
+
+import numpy as np
+
+from ..core.engine import EngineConfig, ParsirEngine
+from ..core.ref_engine import SequentialResult, run_sequential
+from ..workloads.registry import all_workloads, conformance_spec, get_workload
+
+#: named engine-config points of the conformance sweep.  Values are
+#: EngineConfig overrides; the two pseudo-keys are handled by the harness:
+#: ``epoch_len_frac`` scales epoch_len off the model lookahead (the epoch
+#: count is rescaled so the simulated horizon is unchanged), ``batch_impl``
+#: = "model" requires the workload's ``supports_batch_impl``.
+SWEEP: dict[str, dict] = {
+    "batch-allgather": dict(),
+    "batch-a2a": dict(route="a2a"),
+    "ltf": dict(scheduler="ltf"),
+    "steal-allgather": dict(steal=True, steal_cap=2, claim_cap=4),
+    "steal-a2a": dict(route="a2a", steal=True, steal_cap=2, claim_cap=4),
+    "epoch-fraction": dict(epoch_len_frac=0.5),
+    "batch-model": dict(batch_impl="model"),
+}
+
+
+def engine_pending(eng: ParsirEngine, state) -> np.ndarray:
+    """(dst, seed) multiset of events in flight (calendar + fallback), sorted.
+
+    Calendar leading dims concatenate per-device local objects; with the
+    engine's contiguous equal placement the leading index *is* the global id.
+    """
+    cnt = np.asarray(state.cal.cnt)                  # [O, N]
+    seed = np.asarray(state.cal.seed)                # [O, N, C]
+    O, N, C = seed.shape
+    live = np.arange(C)[None, None, :] < cnt[:, :, None]
+    obj = np.broadcast_to(np.arange(O)[:, None, None], live.shape)
+    dsts = [obj[live].astype(np.uint64)]
+    seeds = [seed[live].astype(np.uint64)]
+
+    fbv = np.asarray(state.fb.events.valid)
+    dsts.append(np.asarray(state.fb.events.dst)[fbv].astype(np.uint64))
+    seeds.append(np.asarray(state.fb.events.seed)[fbv].astype(np.uint64))
+
+    rec = np.stack([np.concatenate(dsts), np.concatenate(seeds)], axis=1)
+    return rec[np.lexsort((rec[:, 1], rec[:, 0]))] if rec.size \
+        else rec.reshape(0, 2)
+
+
+def stack_oracle_state(obj_state: list[dict]) -> dict[str, np.ndarray]:
+    """List-of-per-object-dicts (oracle) → dict-of-arrays (engine layout)."""
+    keys = obj_state[0].keys()
+    return {k: np.stack([np.asarray(s[k]) for s in obj_state])
+            for k in keys}
+
+
+def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
+                    engine_kw: dict | None = None, mesh=None,
+                    dyadic: bool = True,
+                    ref: SequentialResult | None = None) -> dict:
+    """Run ``model`` through the engine under ``overrides`` and assert full
+    agreement with the sequential oracle.  Returns a report dict (totals,
+    pending count, the oracle result for reuse)."""
+    overrides = dict(overrides)
+    lookahead = model.params.lookahead
+    frac = overrides.pop("epoch_len_frac", None)
+    kw = dict(lookahead=lookahead)
+    kw.update(engine_kw or {})
+    kw.update(overrides)
+    if frac is not None:
+        kw["epoch_len"] = lookahead * frac
+        n_epochs = int(round(n_epochs / frac))
+    cfg = EngineConfig(**kw)
+
+    eng = ParsirEngine(model, cfg, mesh=mesh)
+    st = eng.run(eng.init(), n_epochs)
+    tot = eng.totals(st)
+
+    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
+                    "late_events", "lookahead_violations"):
+        assert tot[counter] == 0, f"{counter}={tot[counter]} (must be 0): {tot}"
+
+    if ref is None:
+        ref = run_sequential(model, n_epochs, cfg.epoch_len)
+    assert tot["processed"] == ref.total_processed, \
+        f"processed {tot['processed']} != oracle {ref.total_processed}"
+
+    pend = engine_pending(eng, st)
+    ref_pend = ref.pending_sorted()
+    assert pend.shape == ref_pend.shape, \
+        f"pending count {pend.shape[0]} != oracle {ref_pend.shape[0]}"
+    np.testing.assert_array_equal(pend, ref_pend,
+                                  err_msg="pending (dst, seed) multiset")
+
+    if dyadic:
+        want = stack_oracle_state(ref.obj_state)
+        obj = {k: np.asarray(v) for k, v in st.obj.items()}
+        assert set(want) == set(obj), (set(want), set(obj))
+        for k in want:
+            np.testing.assert_array_equal(obj[k], want[k],
+                                          err_msg=f"object state [{k}]")
+
+    return {"totals": tot, "pending": int(pend.shape[0]), "ref": ref,
+            "config": kw, "n_epochs": n_epochs}
+
+
+def check_workload(name: str, config: str, *, mesh=None,
+                   ref_cache: dict | None = None,
+                   model_overrides: dict | None = None,
+                   engine_overrides: dict | None = None) -> dict:
+    """Conformance-check a registered workload under a named SWEEP config."""
+    spec = conformance_spec(name)
+    overrides = dict(SWEEP[config])
+    if overrides.get("batch_impl") == "model" \
+            and not spec["supports_batch_impl"]:
+        raise ValueError(f"workload {name} has no process_batch")
+    model = get_workload(name, **dict(spec["model_kw"],
+                                      **(model_overrides or {})))
+    engine_kw = dict(spec["engine_kw"], **(engine_overrides or {}))
+
+    ref = None
+    if ref_cache is not None:
+        # the oracle run depends on (workload, overrides, horizon), not the
+        # engine routing/scheduling config — amortize it across the sweep.
+        frac = overrides.get("epoch_len_frac")
+        key = (name, spec["n_epochs"], frac,
+               tuple(sorted((model_overrides or {}).items())),
+               tuple(sorted((engine_overrides or {}).items())))
+        ref = ref_cache.get(key)
+    report = run_conformance(model, overrides, n_epochs=spec["n_epochs"],
+                             engine_kw=engine_kw, mesh=mesh,
+                             dyadic=spec["dyadic"], ref=ref)
+    if ref_cache is not None:
+        ref_cache[key] = report["ref"]
+    return report
+
+
+# ---------------------------------------------------------------------------
+# subprocess driver (multi-device sweeps)
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", required=True, choices=all_workloads())
+    ap.add_argument("--configs", default="batch-allgather",
+                    help="comma-separated SWEEP names, or 'all'")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--expect-stolen", action="store_true",
+                    help="assert stats.stolen > 0 summed over steal configs")
+    args = ap.parse_args(argv)
+
+    import jax
+    from jax.sharding import Mesh
+    from ..core.engine import AXIS
+
+    devs = jax.devices()
+    assert len(devs) >= args.devices, \
+        (f"{len(devs)} devices visible, need {args.devices} — set XLA_FLAGS="
+         f"--xla_force_host_platform_device_count={args.devices}")
+    mesh = Mesh(np.array(devs[:args.devices]), (AXIS,))
+
+    names = list(SWEEP) if args.configs == "all" \
+        else args.configs.split(",")
+    unknown = [c for c in names if c not in SWEEP]
+    if unknown:
+        ap.error(f"unknown config(s) {unknown}; choose from {list(SWEEP)}")
+    spec = conformance_spec(args.workload)
+    ref_cache: dict = {}
+    stolen = 0
+    for config in names:
+        if SWEEP[config].get("batch_impl") == "model" \
+                and not spec["supports_batch_impl"]:
+            print(f"SKIP {args.workload} {config} (no process_batch)")
+            continue
+        report = check_workload(args.workload, config, mesh=mesh,
+                                ref_cache=ref_cache)
+        tot = report["totals"]
+        if SWEEP[config].get("steal"):
+            stolen += tot["stolen"]
+        print(f"OK {args.workload} {config} D={args.devices} "
+              f"processed={tot['processed']} pending={report['pending']} "
+              f"stolen={tot['stolen']}")
+    if args.expect_stolen:
+        assert stolen > 0, "stealing never engaged across steal configs"
+    print("CONFORMANCE PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

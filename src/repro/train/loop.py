@@ -37,7 +37,11 @@ class Trainer:
             psh = params_shardings(pshape, mesh)
             osh = params_shardings(jax.eval_shape(opt.init, pshape), mesh)
             self._psh, self._osh = psh, osh
+            # out_shardings pinned to the input shardings: otherwise the
+            # compiler may pick different output placements and the next
+            # call's donated args no longer match in_shardings.
             self._jit = jax.jit(step_fn, in_shardings=(psh, osh, None),
+                                out_shardings=(psh, osh, None),
                                 donate_argnums=(0, 1))
         else:
             self._psh = self._osh = None

@@ -1,0 +1,12 @@
+"""The workload zoo: registered SimModels, each with a numpy oracle mirror.
+
+PARSIR's engine techniques — per-object batch processing, disjoint-access
+parallelism, work stealing — are claimed fully transparent to model code
+(paper §I).  This package is that claim made testable: a registry of diverse
+workloads (uniform PHOLD, hot-spot PHOLD, a closed queueing network, a
+cluster token-ring), every one written twice (JAX for the engine, numpy for
+the sequential oracle) with dyadic-exact arithmetic so the differential
+conformance harness (:mod:`repro.testing.conformance`) can assert bit-exact
+equivalence under every engine configuration.
+"""
+from .registry import all_workloads, conformance_spec, get_workload  # noqa: F401

@@ -1,0 +1,73 @@
+"""Hot-spot PHOLD: skewed destinations AND an imbalanced initial population.
+
+The Erlang-PDES load-balancing literature (Toscano et al., PAPERS.md) makes
+the point that hot-spot traffic is where load-balancing claims live or die:
+uniform PHOLD never gives work stealing anything to do.  This variant creates
+a persistent per-object (and therefore per-device) load imbalance two ways:
+
+  * **routing skew** — with probability ``hot_prob/256`` every emitted event
+    re-targets one of the first ``hot_objects`` ids (the Phold base model's
+    non-uniform routing path, here on by default);
+  * **population skew** — the first ``hot_objects`` objects bootstrap with
+    ``(1 + hot_boost)×`` the baseline per-object initial events, so the very
+    first epoch is already imbalanced instead of waiting for routing skew to
+    concentrate the population.
+
+Because contiguous placement puts all hot objects on device 0, a multi-device
+run with ``steal=True`` must observe ``stats.stolen > 0`` — the conformance
+suite asserts exactly that.  Processing/state logic is inherited from
+:class:`repro.phold.model.Phold`, so the JAX/numpy pair stays dyadic-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import events as ev
+from ..phold.model import _INIT_C, Phold, PholdParams, _draw_np
+
+
+@dataclasses.dataclass(frozen=True)
+class HotspotParams(PholdParams):
+    hot_objects: int = 4
+    hot_prob: int = 128       # out of 256
+    hot_boost: int = 3        # hot objects start with (1 + boost) * M events
+
+
+class HotspotPhold(Phold):
+
+    def initial_events(self) -> dict[str, np.ndarray]:
+        p = self.params
+        counts = np.full(p.n_objects, p.initial_events, np.int64)
+        counts[:p.hot_objects] *= 1 + p.hot_boost
+        o = np.repeat(np.arange(p.n_objects, dtype=np.uint32), counts)
+        m = np.concatenate([np.arange(c, dtype=np.uint32) for c in counts])
+        # same (object, sequence-number) seed formula as uniform PHOLD — the
+        # skew is purely in how many events each object bootstraps.
+        with np.errstate(over="ignore"):
+            s0 = ev._mix_np(ev._mix_np(o ^ _INIT_C) + m * np.uint32(0x9E3779B9))
+        ts0 = _draw_np(ev.fold_np(s0, 2), p).astype(np.float32)
+        return {
+            "dst": o.astype(np.int32),
+            "ts": ts0,
+            "seed": s0,
+            "payload": ev.dyadic10_np(ev.fold_np(s0, 4)).astype(np.float32),
+        }
+
+
+def make(**overrides) -> HotspotPhold:
+    return HotspotPhold(HotspotParams(**overrides))
+
+
+CONFORMANCE = dict(
+    model_kw=dict(n_objects=16, initial_events=3, state_nodes=64,
+                  realloc_fraction=0.02, lookahead=0.5, dist="dyadic",
+                  hot_objects=4, hot_prob=128, hot_boost=3),
+    n_epochs=24,
+    # hot objects concentrate ~half the population on 4 ids → deep buckets.
+    engine_kw=dict(n_buckets=8, bucket_cap=256, route_cap=512,
+                   fallback_cap=512),
+    dyadic=True,
+    supports_batch_impl=True,
+)

@@ -1,0 +1,23 @@
+"""Classic uniform PHOLD (paper §IV-A), registered in the workload zoo.
+
+The model itself lives in :mod:`repro.phold.model`; this module only binds it
+to the registry contract (``make`` + ``CONFORMANCE``).
+"""
+from __future__ import annotations
+
+from ..phold.model import Phold, PholdParams
+
+
+def make(**overrides) -> Phold:
+    return Phold(PholdParams(**overrides))
+
+
+CONFORMANCE = dict(
+    model_kw=dict(n_objects=16, initial_events=4, state_nodes=64,
+                  realloc_fraction=0.02, lookahead=0.5, dist="dyadic"),
+    n_epochs=24,
+    engine_kw=dict(n_buckets=8, bucket_cap=64, route_cap=512,
+                   fallback_cap=512),
+    dyadic=True,
+    supports_batch_impl=True,
+)

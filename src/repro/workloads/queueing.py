@@ -1,0 +1,142 @@
+"""Closed queueing network — DESP-C++'s reference validation scenario.
+
+``n_jobs`` jobs circulate forever among ``n_stations`` single-server FIFO
+stations (a closed Jackson-style network).  An event is "job arrives at
+station at ``ts``": the server starts it at ``max(ts, busy_until)``, holds it
+for ``lookahead + draw(dist)`` time units, and forwards it to a uniformly
+random next station at the departure time.  Since each processed event emits
+exactly one successor the job population is conserved — the same invariant
+the PHOLD tests use — and with ``dist='dyadic'`` every timestamp, wait and
+busy-time accumulator stays on the 1/1024 grid, so engine and numpy oracle
+agree bit-for-bit.
+
+The FIFO coupling through ``busy_until`` makes this a stronger ordering test
+than PHOLD: processing two arrivals at one station out of timestamp order
+produces a *different* (wrong) departure schedule, not just a reordered one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import events as ev
+from ..core.api import EmittedEvents, SimModel
+
+_Q_INIT = np.uint32(0x5E12F00D)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueingParams:
+    n_stations: int = 64
+    n_jobs: int = 256              # closed population (jobs never leave)
+    lookahead: float = 0.5         # L — min service time, engine lookahead
+    service_mean: float = 1.0      # scale for non-dyadic service draws
+    dist: str = "dyadic"           # dyadic | uniform24 | exponential
+
+
+class ClosedQueueingNetwork(SimModel):
+    max_out = 1
+
+    def __init__(self, params: QueueingParams):
+        self.params = params
+
+    @property
+    def n_objects(self) -> int:
+        return self.params.n_stations
+
+    # -- state ---------------------------------------------------------------
+
+    def init_object_state(self, global_ids: np.ndarray) -> Any:
+        n = len(global_ids)
+        return {
+            "busy_until": jnp.zeros((n,), jnp.float32),
+            "served": jnp.zeros((n,), jnp.int32),
+            "busy_time": jnp.zeros((n,), jnp.float32),
+            "wait_time": jnp.zeros((n,), jnp.float32),
+        }
+
+    def initial_events(self) -> dict[str, np.ndarray]:
+        p = self.params
+        j = np.arange(p.n_jobs, dtype=np.uint32)
+        s0 = ev._mix_np(j ^ _Q_INIT)
+        ts0 = ev.draw_np(ev.fold_np(s0, 2), p.dist, p.service_mean)
+        return {
+            "dst": (j % np.uint32(p.n_stations)).astype(np.int32),
+            "ts": ts0.astype(np.float32),
+            "seed": s0,
+            "payload": j.astype(np.float32),    # the job id rides the payload
+        }
+
+    # -- ProcessEvent (JAX) ----------------------------------------------------
+
+    def process_event(self, state, ts, seed, payload):
+        p = self.params
+        seed = seed.astype(jnp.uint32)
+        service = jnp.float32(p.lookahead) + ev.draw(
+            ev.fold(seed, 0), p.dist, p.service_mean)
+        begin = jnp.maximum(ts, state["busy_until"])
+        depart = begin + service                 # >= ts + lookahead
+        new_state = {
+            "busy_until": depart,
+            "served": state["served"] + 1,
+            "busy_time": state["busy_time"] + service,
+            "wait_time": state["wait_time"] + (begin - ts),
+        }
+        dst = (ev.fold(seed, 1) % jnp.uint32(p.n_stations)).astype(jnp.int32)
+        out = EmittedEvents(
+            dst=dst[None],
+            ts=depart[None],
+            seed=ev.fold(seed, 3)[None],
+            payload=payload[None],               # job identity is conserved
+            valid=jnp.ones((1,), bool),
+        )
+        return new_state, out
+
+    # -- numpy mirror (sequential oracle) --------------------------------------
+
+    def init_object_state_np(self, global_ids: np.ndarray) -> list[dict]:
+        return [{
+            "busy_until": np.float32(0.0),
+            "served": np.int32(0),
+            "busy_time": np.float32(0.0),
+            "wait_time": np.float32(0.0),
+        } for _ in global_ids]
+
+    def process_event_np(self, st: dict, ts, seed, payload):
+        p = self.params
+        seed = np.uint32(seed)
+        service = np.float32(np.float32(p.lookahead)
+                             + ev.draw_np(ev.fold_np(seed, 0), p.dist,
+                                          p.service_mean))
+        begin = np.float32(max(np.float32(ts), st["busy_until"]))
+        depart = np.float32(begin + service)
+        st["busy_until"] = depart
+        st["served"] = np.int32(st["served"] + 1)
+        st["busy_time"] = np.float32(st["busy_time"] + service)
+        st["wait_time"] = np.float32(st["wait_time"] + (begin - np.float32(ts)))
+        return {
+            "dst": np.int32(ev.fold_np(seed, 1) % np.uint32(p.n_stations)),
+            "ts": depart,
+            "seed": ev.fold_np(seed, 3),
+            "payload": np.float32(payload),
+        }
+
+
+def make(**overrides) -> ClosedQueueingNetwork:
+    if "n_objects" in overrides:                 # workload-agnostic drivers
+        overrides["n_stations"] = overrides.pop("n_objects")
+    overrides.pop("initial_events", None)
+    return ClosedQueueingNetwork(QueueingParams(**overrides))
+
+
+CONFORMANCE = dict(
+    model_kw=dict(n_stations=16, n_jobs=64, lookahead=0.5, dist="dyadic"),
+    n_epochs=24,
+    engine_kw=dict(n_buckets=8, bucket_cap=96, route_cap=512,
+                   fallback_cap=512),
+    dyadic=True,
+    supports_batch_impl=False,
+)

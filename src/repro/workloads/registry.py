@@ -1,0 +1,44 @@
+"""Workload registry: ``--workload <id>`` → SimModel (configs/registry.py idiom).
+
+Every module under :mod:`repro.workloads` exposes:
+
+  * ``make(**overrides)`` — build the model; all accept ``n_objects`` /
+    ``lookahead`` / ``dist`` so drivers can stay workload-agnostic;
+  * ``CONFORMANCE`` — the small-scale differential-test recipe consumed by
+    :mod:`repro.testing.conformance`:
+      ``model_kw``   kwargs for a small oracle-checkable instance
+      ``n_epochs``   epochs to run at ``engine_kw``'s default epoch length
+      ``engine_kw``  EngineConfig kwargs (capacities sized for the workload)
+      ``dyadic``     True → final object state must match the oracle
+                     bit-for-bit
+      ``supports_batch_impl``  True → the model has ``process_batch`` (Pallas)
+"""
+from __future__ import annotations
+
+import copy
+from importlib import import_module
+
+WORKLOADS = {
+    "phold": "phold",
+    "phold-hotspot": "hotspot",
+    "queueing": "queueing",
+    "cluster": "cluster",
+}
+
+
+def _module(name: str):
+    return import_module(f"repro.workloads.{WORKLOADS[name]}")
+
+
+def get_workload(name: str, **overrides):
+    """Build a registered workload model; overrides go to its params."""
+    return _module(name).make(**overrides)
+
+
+def conformance_spec(name: str) -> dict:
+    """The workload's differential-test recipe (deep copy — safe to mutate)."""
+    return copy.deepcopy(_module(name).CONFORMANCE)
+
+
+def all_workloads() -> list[str]:
+    return list(WORKLOADS)

@@ -31,8 +31,8 @@ _CHILD = textwrap.dedent("""
 
     ckpt_dir = sys.argv[1]
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = get_config("granite-3-2b", reduced=True)
     model = build_model(cfg)
     tcfg = TrainConfig(learning_rate=3e-3, total_steps=8, warmup_steps=2,

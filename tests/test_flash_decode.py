@@ -14,8 +14,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.models.registry import build_model
     from repro.data.synthetic import make_batch
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     base = get_config("granite-3-2b", reduced=True)
     base = dataclasses.replace(base, n_heads=4, n_kv_heads=4, head_dim=16)
     model0 = build_model(base)

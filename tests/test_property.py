@@ -7,7 +7,12 @@
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — property tests skipped, not collected")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import events as ev
 from repro.core.calendar import extract_sorted, insert, make_calendar

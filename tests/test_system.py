@@ -1,31 +1,39 @@
 """End-to-end behaviour: the parallel PARSIR engine must reproduce the
-sequential oracle exactly — event counts, per-object ordering, and (with the
-dyadic increment distribution) bit-identical object state."""
+sequential oracle exactly — counters clean, processed counts equal, pending
+multisets identical, and (with the dyadic increment distribution)
+bit-identical object state.
+
+The oracle-differential machinery lives in the reusable harness
+(:mod:`repro.testing.conformance`); this file drives it for the PHOLD
+workloads plus the PHOLD-specific invariants (population conservation,
+monotone stats, skew concentration).  The full registry sweep, including
+multi-device stealing/a2a runs, is in test_workloads.py.
+"""
 import numpy as np
 import pytest
 
 from repro.core.engine import EngineConfig, ParsirEngine
-from repro.core.ref_engine import run_sequential
-from repro.phold.model import Phold, PholdParams
+from repro.testing import conformance as cf
+from repro.workloads.registry import get_workload
 
 N_EPOCHS = 24
+
+_REF_CACHE = {}
 
 
 def small_model(**kw):
     defaults = dict(n_objects=16, initial_events=4, state_nodes=64,
                     realloc_fraction=0.02, lookahead=0.5, dist="dyadic")
     defaults.update(kw)
-    return Phold(PholdParams(**defaults))
+    return get_workload("phold", **defaults)
 
 
 def run_engine(model, n_epochs, **cfg_kw):
     defaults = dict(lookahead=model.params.lookahead, n_buckets=8,
                     bucket_cap=64, route_cap=512, fallback_cap=512)
     defaults.update(cfg_kw)
-    cfg = EngineConfig(**defaults)
-    eng = ParsirEngine(model, cfg)
-    st = eng.init()
-    st = eng.run(st, n_epochs)
+    eng = ParsirEngine(model, EngineConfig(**defaults))
+    st = eng.run(eng.init(), n_epochs)
     return eng, st
 
 
@@ -37,24 +45,14 @@ def assert_clean(tot):
     assert tot["lookahead_violations"] == 0
 
 
-@pytest.mark.parametrize("scheduler", ["batch", "ltf"])
-def test_engine_matches_sequential_oracle(scheduler):
-    model = small_model()
-    eng, st = run_engine(model, N_EPOCHS, scheduler=scheduler)
-    tot = eng.totals(st)
-    assert_clean(tot)
-
-    ref = run_sequential(model, N_EPOCHS, eng.cfg.epoch_len)
-    assert tot["processed"] == ref.total_processed
-
-    pay = np.asarray(st.obj["payload"])
-    ref_pay = np.stack([s["payload"] for s in ref.obj_state])
-    np.testing.assert_array_equal(pay, ref_pay)  # bit-exact
-    np.testing.assert_array_equal(np.asarray(st.obj["top"]),
-                                  np.array([s["top"] for s in ref.obj_state]))
-    np.testing.assert_array_equal(
-        np.asarray(st.obj["addresses"]),
-        np.stack([s["addresses"] for s in ref.obj_state]))
+@pytest.mark.parametrize("config",
+                         ["batch-allgather", "batch-a2a", "ltf",
+                          "epoch-fraction"])
+def test_engine_matches_sequential_oracle(config):
+    # full differential check (counters, counts, pending multiset, bit-exact
+    # state) via the harness, one named sweep point per case.
+    report = cf.check_workload("phold", config, ref_cache=_REF_CACHE)
+    assert report["totals"]["processed"] > 0
 
 
 def test_event_population_is_conserved():
@@ -63,19 +61,6 @@ def test_event_population_is_conserved():
     eng, st = run_engine(model, N_EPOCHS)
     assert_clean(eng.totals(st))
     assert eng.in_flight(st) == 32 * 8
-
-
-def test_epoch_fraction_run():
-    # paper §IV-C: PARSIR may run with epoch length a fraction of the lookahead.
-    model = small_model()
-    eng, st = run_engine(model, 2 * N_EPOCHS, epoch_len=0.25)
-    tot = eng.totals(st)
-    assert_clean(tot)
-    ref = run_sequential(model, 2 * N_EPOCHS, 0.25)
-    assert tot["processed"] == ref.total_processed
-    pay = np.asarray(st.obj["payload"])
-    ref_pay = np.stack([s["payload"] for s in ref.obj_state])
-    np.testing.assert_array_equal(pay, ref_pay)
 
 
 @pytest.mark.parametrize("dist", ["uniform24", "exponential"])
@@ -106,16 +91,10 @@ def test_stats_monotone_across_chunks():
 
 
 def test_skewed_routing_matches_oracle():
-    # paper §IV-A non-uniform destination distribution + stealing-relevant skew
-    model = small_model(n_objects=32, hot_objects=4, hot_prob=128)
-    eng, st = run_engine(model, N_EPOCHS, bucket_cap=256)
-    tot = eng.totals(st)
-    assert_clean(tot)
-    ref = run_sequential(model, N_EPOCHS, eng.cfg.epoch_len)
-    assert tot["processed"] == ref.total_processed
-    pay = np.asarray(st.obj["payload"])
-    ref_pay = np.stack([s["payload"] for s in ref.obj_state])
-    np.testing.assert_array_equal(pay, ref_pay)
+    # paper §IV-A non-uniform destination distribution + stealing-relevant
+    # skew, now a registered workload with its own conformance recipe.
+    report = cf.check_workload("phold-hotspot", "batch-allgather",
+                               ref_cache=_REF_CACHE)
+    per_obj = report["ref"].processed_per_object
     # the skew actually concentrated load on the hot objects
-    per_obj = ref.processed_per_object
     assert per_obj[:4].mean() > 3 * per_obj[4:].mean()

@@ -1,0 +1,172 @@
+"""The workload zoo × engine-config sweep (testing/conformance.py).
+
+Every registered workload must reproduce the sequential oracle — clean
+counters, equal processed count, identical pending-event multiset, bit-exact
+dyadic state — under every engine configuration: both schedulers, both
+routing strategies, stealing on/off, the Pallas batch implementation, and a
+fractional epoch length.  Single-device sweeps run in-process; the configs
+that only exist with D > 1 (real a2a exchange, work stealing) run through
+the harness's subprocess driver with 4 host devices.
+
+Also here: direct coverage for the stealing caps (steal_cap / claim_cap) and
+the negative-path Stats contract — undersized capacities must *count*
+overflow, never silently drop.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stealing as steal_mod
+from repro.core.engine import EngineConfig, ParsirEngine
+from repro.testing import conformance as cf
+from repro.workloads.registry import (all_workloads, conformance_spec,
+                                      get_workload)
+
+_REF_CACHE = {}
+
+SINGLE_DEVICE_CONFIGS = ["batch-allgather", "batch-a2a", "ltf",
+                         "epoch-fraction"]
+# configs that only do real work with D > 1 (pairwise a2a exchange, loans).
+MULTI_DEVICE_CONFIGS = "batch-a2a,steal-allgather,steal-a2a"
+
+
+@pytest.mark.parametrize("workload", all_workloads())
+@pytest.mark.parametrize("config", SINGLE_DEVICE_CONFIGS)
+def test_conformance_single_device(workload, config):
+    report = cf.check_workload(workload, config, ref_cache=_REF_CACHE)
+    assert report["totals"]["processed"] > 0
+
+
+@pytest.mark.parametrize("workload",
+                         [w for w in all_workloads()
+                          if conformance_spec(w)["supports_batch_impl"]])
+def test_conformance_batch_model_impl(workload):
+    # batch_impl='model': the whole per-object batch through the Pallas
+    # event-apply kernel instead of the vmap rounds loop.
+    report = cf.check_workload(workload, "batch-model", ref_cache=_REF_CACHE)
+    assert report["totals"]["processed"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("workload", all_workloads())
+def test_conformance_multidevice(workload):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    cmd = [sys.executable, "-m", "repro.testing.conformance",
+           "--workload", workload, "--devices", "4",
+           "--configs", MULTI_DEVICE_CONFIGS]
+    if workload == "phold-hotspot":
+        # the hot-spot workload exists to make loans matter: stealing MUST
+        # engage on it (stats.stolen > 0) or load balancing is dead code.
+        cmd.append("--expect-stolen")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "CONFORMANCE PASS" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# stealing caps (core/stealing.py)
+# ---------------------------------------------------------------------------
+
+def test_select_loans_respects_steal_cap():
+    cnt_b = jnp.asarray([50, 40, 30, 20, 10, 5, 0, 0], jnp.int32)
+    load, target = jnp.int32(155), jnp.int32(20)
+    idx, w, valid = steal_mod.select_loans(cnt_b, load, target, 3)
+    assert idx.shape == (3,) and w.shape == (3,) and valid.shape == (3,)
+    assert int(valid.sum()) <= 3
+    # published loans are the donor's hottest objects, weights match counts
+    assert set(np.asarray(idx).tolist()) == {0, 1, 2}
+    np.testing.assert_array_equal(np.asarray(w),
+                                  np.where(np.asarray(valid),
+                                           [50, 40, 30], 0))
+
+
+def test_select_loans_stops_at_surplus():
+    # donor barely above target: only loans that fit the surplus are valid.
+    cnt_b = jnp.asarray([30, 30, 30, 30], jnp.int32)
+    idx, w, valid = steal_mod.select_loans(cnt_b, jnp.int32(120),
+                                           jnp.int32(100), 4)
+    shipped = np.cumsum(np.asarray(w)) - np.asarray(w)
+    assert np.all(shipped[np.asarray(valid)] < 20)
+    assert int(np.asarray(valid).sum()) == 1  # 2nd loan would ship 30 >= 20
+
+
+def test_select_loans_no_surplus_publishes_nothing():
+    cnt_b = jnp.asarray([10, 10], jnp.int32)
+    _, w, valid = steal_mod.select_loans(cnt_b, jnp.int32(20), jnp.int32(25), 2)
+    assert int(np.asarray(valid).sum()) == 0
+    assert int(np.asarray(w).sum()) == 0
+
+
+def test_plan_loans_respects_claim_cap():
+    D, steal_cap, claim_cap = 4, 8, 2
+    loads = jnp.asarray([120, 0, 0, 0], jnp.int32)
+    weight = jnp.zeros((D, steal_cap), jnp.int32).at[0].set(5)
+    valid = jnp.zeros((D, steal_cap), bool).at[0].set(True)
+    plan = steal_mod.plan_loans(loads, weight, valid, claim_cap)
+    assignee = np.asarray(plan.assignee)
+    claimed = np.asarray(plan.claimed)
+    for d in range(D):
+        assert claimed[assignee == d].sum() <= claim_cap
+    # the overloaded donor never claims its own loans
+    assert not np.any(claimed & (assignee == 0))
+    assert claimed.sum() > 0
+
+
+def test_hotspot_stealing_engages_multidevice():
+    # satellite contract: a nonzero `stolen` counter is actually observed on
+    # the hot-spot workload (the in-process single-device runs never steal).
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.testing.conformance",
+         "--workload", "phold-hotspot", "--devices", "4",
+         "--configs", "steal-a2a", "--expect-stolen"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "CONFORMANCE PASS" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# overflow accounting: the negative path of the Stats contract
+# ---------------------------------------------------------------------------
+
+def _overflow_run(n_epochs=8, **cfg_kw):
+    model = get_workload("phold", n_objects=16, initial_events=8,
+                         state_nodes=64, realloc_fraction=0.02,
+                         lookahead=0.5, dist="dyadic")
+    defaults = dict(lookahead=0.5, n_buckets=8, bucket_cap=64,
+                    route_cap=512, fallback_cap=512)
+    defaults.update(cfg_kw)
+    eng = ParsirEngine(model, EngineConfig(**defaults))
+    st = eng.run(eng.init(), n_epochs)
+    return eng.totals(st)
+
+
+def test_undersized_bucket_cap_reports_cal_overflow():
+    tot = _overflow_run(bucket_cap=2)
+    assert tot["cal_overflow"] > 0
+
+
+def test_undersized_route_cap_reports_route_overflow():
+    tot = _overflow_run(route_cap=4, fallback_cap=4096)
+    assert tot["route_overflow"] > 0
+
+
+def test_undersized_fallback_cap_reports_fb_overflow():
+    tot = _overflow_run(route_cap=4, fallback_cap=4)
+    assert tot["fb_overflow"] > 0
+
+
+def test_proper_caps_stay_clean():
+    tot = _overflow_run()
+    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
+                    "late_events", "lookahead_violations"):
+        assert tot[counter] == 0, (counter, tot)
