@@ -85,6 +85,9 @@ BENCH_MODEL_KW = {
     "phold-hotspot": dict(hot_objects=32, hot_prob=96, hot_boost=1),
     "queueing": dict(n_jobs=2048),
     "cluster": dict(n_rings=64),
+    # open network: n_objects is split ~evenly across the five roles by
+    # make(); unbounded sources keep the arrival stream going all run.
+    "open-queueing": dict(),
 }
 
 

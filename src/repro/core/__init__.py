@@ -1,3 +1,30 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""PARSIR engine core: the paper's system, decomposed.
+
+Stable public surface — external code should import from here (or the
+submodules listed), not from pipeline internals:
+
+  * :mod:`repro.core.api`       — ``SimModel`` / ``EmittedEvents`` (the model
+    contract);
+  * :mod:`repro.core.engine`    — ``ParsirEngine`` wrapper + re-exported
+    pipeline names (``EngineConfig``, ``EngineState``, ``Stats``, ``AXIS``);
+  * :mod:`repro.core.pipeline`  — the stage pipeline (``Scheduler`` /
+    ``Router`` / ``StealPolicy`` interfaces + registries) for anyone adding a
+    stage implementation;
+  * :mod:`repro.core.events`    — ``EventBatch`` + the counter-based RNG;
+  * :mod:`repro.core.calendar`, :mod:`repro.core.placement`,
+    :mod:`repro.core.stealing` — the data structures the stages ride on;
+  * :mod:`repro.core.ref_engine` — the sequential numpy oracle.
+"""
+from .api import EmittedEvents, SimModel  # noqa: F401
+from .engine import (AXIS, EngineConfig, EngineState, ParsirEngine,  # noqa: F401
+                     Stats, make_step, zero_stats)
+from .events import EventBatch  # noqa: F401
+from .placement import Placement, equal_placement, weighted_placement  # noqa: F401
+from .ref_engine import SequentialResult, run_sequential  # noqa: F401
+
+__all__ = [
+    "AXIS", "EmittedEvents", "EngineConfig", "EngineState", "EventBatch",
+    "ParsirEngine", "Placement", "SequentialResult", "SimModel", "Stats",
+    "equal_placement", "make_step", "run_sequential", "weighted_placement",
+    "zero_stats",
+]

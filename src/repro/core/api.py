@@ -31,7 +31,15 @@ import numpy as np
 
 
 class EmittedEvents(NamedTuple):
-    """Up to ``max_out`` events emitted while processing one event."""
+    """Up to ``max_out`` events emitted while processing one event.
+
+    Emission arity is variable: any subset of the ``max_out`` rows may be
+    live, flagged by ``valid`` — every pipeline stage honors the mask.  A
+    sink *absorbs* its input by returning an all-invalid row; a source or
+    fork *fans out* by returning several valid rows (``max_out > 1``).  The
+    numpy oracle mirror expresses the same contract as a list of event dicts
+    (see :func:`repro.core.ref_engine.as_emitted`).
+    """
 
     dst: jax.Array      # i32 [max_out] global object id
     ts: jax.Array       # f32 [max_out]
@@ -43,7 +51,10 @@ class EmittedEvents(NamedTuple):
 class SimModel(abc.ABC):
     """A discrete-event simulation model runnable by the PARSIR engine."""
 
-    #: maximum number of events a single ProcessEvent call can emit.
+    #: maximum number of events a single ProcessEvent call can emit.  The
+    #: engine sizes its per-epoch emission buffers by this, so it is a hard
+    #: cap; actual emissions per event range over 0..max_out via the
+    #: ``EmittedEvents.valid`` mask (0 = absorption, >1 = fan-out).
     max_out: int = 1
 
     @property

@@ -2,50 +2,60 @@
 
 One SPMD program instance per mesh device plays the role of a PARSIR worker
 thread pinned to a CPU; a device's HBM plays the NUMA node.  An engine step
-processes exactly one epoch:
+processes exactly one epoch through the stage pipeline of
+:mod:`repro.core.pipeline`:
 
   1. **extract** — drain the calendar bucket of the current epoch for all local
      objects, sorted per object by (ts, seed) (lock-free: exclusive ownership,
      see calendar.py);
   2. **steal (optional)** — epoch-granular loans of hot objects from overloaded
-     to underloaded devices (stealing.py), decided from the globally gathered
-     load vector (possible because the lookahead closes the epoch's workload);
-  3. **process** — the per-object *batch* execution at the heart of the paper:
-     round r applies the r-th in-order event of every object in parallel
-     (vmap), so each object's state stays register/VMEM-hot across its whole
-     batch while objects are processed in parallel;
+     to underloaded devices (``StealPolicy``), decided from the globally
+     gathered load vector (possible because the lookahead closes the epoch's
+     workload);
+  3. **process** — the per-object *batch* execution at the heart of the paper
+     (``Scheduler``): round r applies the r-th in-order event of every object
+     in parallel (vmap), so each object's state stays register/VMEM-hot across
+     its whole batch while objects are processed in parallel;
   4. **route** — emitted events plus drained fallback entries are exchanged
-     (`allgather` mirrors the shared-memory "any thread enqueues anywhere"
-     semantics; `a2a` is the optimized pairwise exchange);
+     (``Router``: `allgather` mirrors the shared-memory "any thread enqueues
+     anywhere" semantics; `a2a` is the optimized pairwise exchange);
   5. **deliver** — owners insert routed events into calendar buckets (conflict-
      free scatter) or park beyond-horizon events in the fallback buffer;
   6. **barrier** — implicit in the collectives; epoch advances everywhere.
 
+Event flow is variable-arity end to end: each processed event emits
+0..``model.max_out`` successors (``EmittedEvents`` rows with ``valid`` masks
+honored at every stage), so open networks — sources fanning out, sinks
+absorbing — run through the same pipeline as the classic one-in/one-out
+workloads.
+
 All capacities are static; every overflow/causality condition is *counted* in
 ``Stats`` and surfaced — a conservative engine must never silently drop or
 reorder, so drivers (and tests) assert these counters stay zero.
+
+This module is the user-facing wrapper (:class:`ParsirEngine`: mesh setup,
+sharding, lifecycle) and re-exports the pipeline's stable names
+(``EngineConfig``, ``EngineState``, ``Stats``, ``AXIS``, ``make_step``) so
+historical ``repro.core.engine`` imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import stealing as steal_mod
 from .api import SimModel
-from .calendar import (Calendar, Fallback, extract_sorted, fallback_put, insert,
-                       make_calendar, make_fallback)
-from .events import (EventBatch, compact_mask, concat_batches, empty_batch,
-                     truncate)
-from .placement import Placement, equal_placement
+from .calendar import make_calendar, make_fallback
+from .events import EventBatch
+from .pipeline import (AXIS, EngineConfig, EngineState, Stats, deliver,
+                       make_step, zero_stats)
+from .placement import equal_placement
 
-AXIS = "workers"
+__all__ = ["AXIS", "EngineConfig", "EngineState", "ParsirEngine", "Stats",
+           "make_step", "zero_stats"]
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -57,404 +67,6 @@ def _shard_map(f, mesh, in_specs, out_specs):
         return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                   check_rep=False)
 
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    lookahead: float                 # model lookahead L
-    epoch_len: float | None = None   # defaults to L; may be a fraction of it
-    n_buckets: int = 8               # N — calendar epochs in flight
-    bucket_cap: int = 128            # events per (object, bucket)
-    route_cap: int = 4096            # outgoing events per device per epoch
-    fallback_cap: int = 4096         # per-device fallback list capacity
-    route: str = "allgather"         # allgather | a2a  (identity when D == 1)
-    scheduler: str = "batch"         # batch (PARSIR) | ltf (lowest-ts-first)
-    batch_impl: str = "rounds"       # rounds (vmap) | model (Pallas kernel)
-    steal: bool = False
-    steal_cap: int = 4               # loans a donor may publish per epoch
-    claim_cap: int = 4               # loans a receiver may claim per epoch
-
-    def __post_init__(self):
-        el = self.epoch_len if self.epoch_len is not None else self.lookahead
-        if el > self.lookahead + 1e-9:
-            raise ValueError("epoch_len must be <= lookahead (conservative)")
-        object.__setattr__(self, "epoch_len", el)
-
-
-class Stats(NamedTuple):
-    processed: jax.Array             # events processed on this device
-    cal_overflow: jax.Array          # bucket-capacity overflows (must be 0)
-    fb_overflow: jax.Array           # fallback-capacity overflows (must be 0)
-    route_overflow: jax.Array        # route-capacity overflows (must be 0)
-    late_events: jax.Array           # causality violations (must be 0)
-    lookahead_violations: jax.Array  # model emitted ts < ts_in + L (must be 0)
-    stolen: jax.Array                # loaned batches processed on this device
-
-
-def zero_stats() -> Stats:
-    z = jnp.zeros((1,), jnp.int32)
-    return Stats(z, z, z, z, z, z, z)
-
-
-class EngineState(NamedTuple):
-    cal: Calendar
-    fb: Fallback
-    obj: Any
-    epoch: jax.Array   # i32 [1] per device (identical everywhere)
-    stats: Stats
-
-
-def _epoch_of(ts: jax.Array, epoch_len: float) -> jax.Array:
-    return jnp.floor(ts * jnp.float32(1.0 / epoch_len)
-                     if math.log2(1.0 / epoch_len).is_integer()
-                     else ts / jnp.float32(epoch_len)).astype(jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# per-object batch processing (paper §II-A)
-# ---------------------------------------------------------------------------
-
-def _process_batch(model: SimModel, obj: Any, ts_s, seed_s, pay_s, cnt_b,
-                   lookahead: float):
-    """Round r applies the r-th (ts,seed)-ordered event of every object."""
-    n_rows, C = ts_s.shape
-    mo = model.max_out
-    out0 = EventBatch(
-        dst=jnp.zeros((C, n_rows, mo), jnp.int32),
-        ts=jnp.full((C, n_rows, mo), jnp.inf, jnp.float32),
-        seed=jnp.zeros((C, n_rows, mo), jnp.uint32),
-        payload=jnp.zeros((C, n_rows, mo), jnp.float32),
-        valid=jnp.zeros((C, n_rows, mo), bool),
-    )
-
-    def body(r, carry):
-        obj, out, lv = carry
-        ets = jax.lax.dynamic_index_in_dim(ts_s, r, axis=1, keepdims=False)
-        eseed = jax.lax.dynamic_index_in_dim(seed_s, r, axis=1, keepdims=False)
-        epay = jax.lax.dynamic_index_in_dim(pay_s, r, axis=1, keepdims=False)
-        m = r < cnt_b
-        new_obj, emitted = jax.vmap(model.process_event)(obj, ets, eseed, epay)
-
-        def sel(n, o):
-            mm = m.reshape(m.shape + (1,) * (n.ndim - 1))
-            return jnp.where(mm, n, o)
-
-        obj = jax.tree.map(sel, new_obj, obj)
-        ev_valid = emitted.valid & m[:, None]
-        lv = lv + jnp.sum((ev_valid
-                           & (emitted.ts < ets[:, None] + jnp.float32(lookahead))
-                           ).astype(jnp.int32))
-        out = EventBatch(
-            dst=out.dst.at[r].set(emitted.dst),
-            ts=out.ts.at[r].set(jnp.where(ev_valid, emitted.ts, jnp.inf)),
-            seed=out.seed.at[r].set(emitted.seed),
-            payload=out.payload.at[r].set(emitted.payload),
-            valid=out.valid.at[r].set(ev_valid),
-        )
-        return obj, out, lv
-
-    max_r = jnp.max(cnt_b) if n_rows else jnp.int32(0)
-    obj, out, lv = jax.lax.fori_loop(
-        0, max_r, body, (obj, out0, jnp.int32(0)))
-    flat = EventBatch(*(x.reshape(-1) for x in out))
-    return obj, flat, lv
-
-
-def _process_ltf(model: SimModel, obj: Any, ts_s, seed_s, pay_s, cnt_b,
-                 lookahead: float):
-    """Comparison scheduler: strict lowest-timestamp-first interleaving across
-    objects (ROOT-Sim/USE-style), one event at a time — same results, no batch
-    locality.  Used by the Fig-5 analogue benchmark."""
-    n_rows, C = ts_s.shape
-    mo = model.max_out
-    rows = jnp.broadcast_to(jnp.arange(n_rows, dtype=jnp.int32)[:, None],
-                            (n_rows, C)).reshape(-1)
-    live = (jnp.arange(C, dtype=jnp.int32)[None, :] < cnt_b[:, None]).reshape(-1)
-    ts_f = jnp.where(live, ts_s.reshape(-1), jnp.inf)
-    seed_f, pay_f = seed_s.reshape(-1), pay_s.reshape(-1)
-
-    p1 = jnp.argsort(seed_f, stable=True)
-    p2 = jnp.argsort(ts_f[p1], stable=True)
-    order = p1[p2]
-    ts_f, seed_f, pay_f = ts_f[order], seed_f[order], pay_f[order]
-    rows, live = rows[order], live[order]
-
-    K = n_rows * C
-    out0 = EventBatch(
-        dst=jnp.zeros((K, mo), jnp.int32),
-        ts=jnp.full((K, mo), jnp.inf, jnp.float32),
-        seed=jnp.zeros((K, mo), jnp.uint32),
-        payload=jnp.zeros((K, mo), jnp.float32),
-        valid=jnp.zeros((K, mo), bool),
-    )
-
-    def body(i, carry):
-        obj, out, lv = carry
-        row = rows[i]
-        st = jax.tree.map(lambda l: l[row], obj)
-        new_st, emitted = model.process_event(st, ts_f[i], seed_f[i], pay_f[i])
-        obj = jax.tree.map(lambda l, n: l.at[row].set(n), obj, new_st)
-        lv = lv + jnp.sum((emitted.valid
-                           & (emitted.ts < ts_f[i] + jnp.float32(lookahead))
-                           ).astype(jnp.int32))
-        out = EventBatch(
-            dst=out.dst.at[i].set(emitted.dst),
-            ts=out.ts.at[i].set(jnp.where(emitted.valid, emitted.ts, jnp.inf)),
-            seed=out.seed.at[i].set(emitted.seed),
-            payload=out.payload.at[i].set(emitted.payload),
-            valid=out.valid.at[i].set(emitted.valid),
-        )
-        return obj, out, lv
-
-    total = jnp.sum(cnt_b)
-    obj, out, lv = jax.lax.fori_loop(0, total, body, (obj, out0, jnp.int32(0)))
-    flat = EventBatch(*(x.reshape(-1) for x in out))
-    return obj, flat, lv
-
-
-# ---------------------------------------------------------------------------
-# delivery (insertion at the owner) — paper §II-B
-# ---------------------------------------------------------------------------
-
-def _deliver(cal: Calendar, fb: Fallback, batch: EventBatch, cur, dev,
-             placement: Placement, cfg: EngineConfig, init: bool):
-    """Insert my in-horizon events; park my beyond-horizon events in fallback."""
-    N = cfg.n_buckets
-    epochs = _epoch_of(batch.ts, cfg.epoch_len)
-    boundaries = jnp.asarray(placement.boundaries, jnp.int32)
-    owner = placement.owner(batch.dst)
-    mine = batch.valid & (owner == dev)
-    lo = jnp.int32(0) if init else cur + 1
-    hi = cur + (N - 1 if init else N)
-    insertable = mine & (epochs >= lo) & (epochs <= hi)
-    beyond = mine & (epochs > hi)
-    late = jnp.sum((mine & (epochs < lo)).astype(jnp.int32))
-
-    local_idx = jnp.clip(batch.dst - boundaries[dev], 0, cal.n_local - 1)
-    cal, cal_ovf = insert(cal, local_idx, epochs, batch.ts, batch.seed,
-                          batch.payload, insertable)
-    fb, fb_ovf = fallback_put(fb, EventBatch(batch.dst, batch.ts, batch.seed,
-                                             batch.payload, beyond))
-    return cal, fb, cal_ovf, fb_ovf, late
-
-
-# ---------------------------------------------------------------------------
-# routing
-# ---------------------------------------------------------------------------
-
-def _route_allgather(route_buf: EventBatch, D: int) -> EventBatch:
-    if D == 1:
-        return route_buf
-    g = jax.tree.map(lambda x: jax.lax.all_gather(x, AXIS), route_buf)
-    return EventBatch(*(x.reshape(-1) for x in g))
-
-
-def _select_send_global(prod: EventBatch, eligible, cfg: EngineConfig):
-    """allgather routing: the first route_cap eligible events are sent."""
-    rank = jnp.cumsum(eligible.astype(jnp.int32)) - 1
-    send = eligible & (rank < cfg.route_cap)
-    ovf = jnp.sum((eligible & ~send).astype(jnp.int32))
-    buf = truncate(compact_mask(prod, send), cfg.route_cap)
-    return buf, send, ovf
-
-
-def _select_send_a2a(prod: EventBatch, eligible, placement: Placement,
-                     cfg: EngineConfig):
-    """a2a routing: per-destination-device sub-buffers of pair_cap events."""
-    D = placement.n_devices
-    pair_cap = cfg.route_cap // D
-    owner = placement.owner(prod.dst)
-    key = jnp.where(eligible, owner, D)
-    order = jnp.argsort(key, stable=True)
-    ks = key[order]
-    idx = jnp.arange(ks.shape[0], dtype=jnp.int32)
-    is_start = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    start_idx = jax.lax.associative_scan(jnp.maximum,
-                                         jnp.where(is_start, idx, 0))
-    rank = idx - start_idx
-    ok = (ks < D) & (rank < pair_cap)
-    ovf = jnp.sum(((ks < D) & ~ok).astype(jnp.int32))
-
-    slot = jnp.where(ok, ks * pair_cap + rank, D * pair_cap)
-
-    def put(field, fill, dtype):
-        out = jnp.full((D * pair_cap,), fill, dtype)
-        return out.at[slot].set(field[order], mode="drop")
-
-    valid = jnp.zeros((D * pair_cap,), bool).at[slot].set(True, mode="drop")
-    buf = EventBatch(
-        dst=put(prod.dst, 0, jnp.int32),
-        ts=put(prod.ts, jnp.inf, jnp.float32),
-        seed=put(prod.seed, 0, jnp.uint32),
-        payload=put(prod.payload, 0.0, jnp.float32),
-        valid=valid,
-    )
-    # sent mask back in original event order
-    send = jnp.zeros_like(eligible).at[order].set(ok)
-    return buf, send, ovf
-
-
-def _route_a2a(buf: EventBatch, D: int, pair_cap: int) -> EventBatch:
-    shaped = jax.tree.map(lambda x: x.reshape(D, pair_cap), buf)
-    recv = jax.tree.map(
-        lambda x: jax.lax.all_to_all(x, AXIS, split_axis=0, concat_axis=0,
-                                     tiled=True), shaped)
-    return EventBatch(*(x.reshape(-1) for x in recv))
-
-
-# ---------------------------------------------------------------------------
-# the per-device epoch step
-# ---------------------------------------------------------------------------
-
-def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
-              ) -> Callable[[EngineState], EngineState]:
-    D = placement.n_devices
-    n_local = placement.n_local_max
-    N, C = cfg.n_buckets, cfg.bucket_cap
-
-    if cfg.scheduler == "ltf":
-        process = _process_ltf
-    elif cfg.batch_impl == "model":
-        if not hasattr(model, "process_batch"):
-            raise ValueError("batch_impl='model' needs model.process_batch")
-
-        def process(model_, obj, ts_s, seed_s, pay_s, cnt_b, lookahead):
-            return model_.process_batch(obj, ts_s, seed_s, pay_s, cnt_b,
-                                        lookahead)
-    else:
-        process = _process_batch
-
-    def step(state: EngineState) -> EngineState:
-        dev = jax.lax.axis_index(AXIS)
-        cur = state.epoch[0]
-        cal, ts_s, seed_s, pay_s, cnt_b = extract_sorted(state.cal, cur)
-        obj = state.obj
-        stolen = jnp.int32(0)
-
-        if cfg.steal and D > 1:
-            (obj, out_flat, lv, stolen, proc_count) = _step_with_steal(
-                model, cfg, placement, dev, obj, ts_s, seed_s, pay_s, cnt_b)
-        else:
-            obj, out_flat, lv = process(model, obj, ts_s, seed_s, pay_s, cnt_b,
-                                        cfg.lookahead)
-            proc_count = jnp.sum(cnt_b)
-
-        # --- producer-side triage: fresh events + fallback entries ---------
-        prod = concat_batches(out_flat, state.fb.events)
-        epochs = _epoch_of(prod.ts, cfg.epoch_len)
-        eligible = prod.valid & (epochs >= cur + 1) & (epochs <= cur + N)
-        late_prod = prod.valid & (epochs <= cur)
-        n_late_prod = jnp.sum(late_prod.astype(jnp.int32))
-
-        if cfg.route == "a2a" and D > 1:
-            route_buf, send, route_ovf = _select_send_a2a(
-                prod, eligible, placement, cfg)
-        else:
-            route_buf, send, route_ovf = _select_send_global(prod, eligible, cfg)
-
-        keep = prod.valid & ~send & ~late_prod
-        kept = compact_mask(prod, keep)
-        fb = Fallback(truncate(kept, cfg.fallback_cap))
-        fb_ovf = jnp.sum(kept.valid[cfg.fallback_cap:].astype(jnp.int32))
-
-        # --- exchange -------------------------------------------------------
-        if D == 1:
-            routed = route_buf
-        elif cfg.route == "a2a":
-            routed = _route_a2a(route_buf, D, cfg.route_cap // D)
-        else:
-            routed = _route_allgather(route_buf, D)
-
-        # --- delivery -------------------------------------------------------
-        cal, fb, cal_ovf, fb_ovf2, late2 = _deliver(
-            cal, fb, routed, cur, dev, placement, cfg, init=False)
-
-        st = state.stats
-        stats = Stats(
-            processed=st.processed + proc_count,
-            cal_overflow=st.cal_overflow + cal_ovf,
-            fb_overflow=st.fb_overflow + fb_ovf + fb_ovf2,
-            route_overflow=st.route_overflow + route_ovf,
-            late_events=st.late_events + n_late_prod + late2,
-            lookahead_violations=st.lookahead_violations + lv,
-            stolen=st.stolen + stolen,
-        )
-        return EngineState(cal, fb, obj, state.epoch + 1, stats)
-
-    return step
-
-
-def _step_with_steal(model, cfg, placement, dev, obj, ts_s, seed_s, pay_s,
-                     cnt_b):
-    """Stealing-enabled processing: publish loans, claim, process, return."""
-    D = placement.n_devices
-    C = cfg.bucket_cap
-    boundaries = jnp.asarray(placement.boundaries, jnp.int32)
-
-    load = jnp.sum(cnt_b)
-    loads = jax.lax.all_gather(load, AXIS)                     # [D]
-    total = jnp.sum(loads)
-    target = (total + D - 1) // D
-
-    top_idx, top_w, loan_valid = steal_mod.select_loans(
-        cnt_b, load, target, cfg.steal_cap)
-
-    pub = {
-        "state": steal_mod.gather_rows(obj, top_idx),
-        "ts": ts_s[top_idx], "seed": seed_s[top_idx], "pay": pay_s[top_idx],
-        "cnt": top_w, "gid": top_idx + boundaries[dev], "valid": loan_valid,
-    }
-    pub_g = jax.tree.map(lambda x: jax.lax.all_gather(x, AXIS), pub)  # [D, sc,…]
-
-    plan = steal_mod.plan_loans(loads, pub_g["cnt"], pub_g["valid"],
-                                cfg.claim_cap)
-
-    # donor side: claimed loans are processed remotely — zero them here.
-    own_claimed = plan.claimed.reshape(D, cfg.steal_cap)[dev]
-    cnt_b = cnt_b.at[top_idx].set(
-        jnp.where(own_claimed & loan_valid, 0, cnt_b[top_idx]))
-
-    # receiver side: compact my claims into claim_cap rows.
-    claim_mask = plan.claimed & (plan.assignee == dev)         # [D*sc]
-    corder = jnp.argsort(~claim_mask, stable=True)[:cfg.claim_cap]
-    cvalid = claim_mask[corder]
-    flat = lambda l: l.reshape((D * cfg.steal_cap,) + l.shape[2:])
-    cl_state = jax.tree.map(lambda l: flat(l)[corder], pub_g["state"])
-    cl_ts = flat(pub_g["ts"])[corder]
-    cl_seed = flat(pub_g["seed"])[corder]
-    cl_pay = flat(pub_g["pay"])[corder]
-    cl_cnt = jnp.where(cvalid, flat(pub_g["cnt"])[corder], 0)
-    cl_gid = flat(pub_g["gid"])[corder]
-
-    n_local = cnt_b.shape[0]
-    obj_aug = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
-                           obj, cl_state)
-    ts_aug = jnp.concatenate([ts_s, cl_ts], axis=0)
-    seed_aug = jnp.concatenate([seed_s, cl_seed], axis=0)
-    pay_aug = jnp.concatenate([pay_s, cl_pay], axis=0)
-    cnt_aug = jnp.concatenate([cnt_b, cl_cnt], axis=0)
-
-    obj_aug, out_flat, lv = _process_batch(model, obj_aug, ts_aug, seed_aug,
-                                           pay_aug, cnt_aug, cfg.lookahead)
-    obj = jax.tree.map(lambda l: l[:n_local], obj_aug)
-    ret_state = jax.tree.map(lambda l: l[n_local:], obj_aug)
-
-    ret = {"state": ret_state, "gid": cl_gid, "valid": cvalid}
-    ret_g = jax.tree.map(lambda x: jax.lax.all_gather(x, AXIS), ret)
-    rgid = ret_g["gid"].reshape(-1)
-    rvalid = ret_g["valid"].reshape(-1)
-    rmine = rvalid & (placement.owner(rgid) == dev)
-    lidx = jnp.clip(rgid - boundaries[dev], 0, n_local - 1)
-    rstate = jax.tree.map(lambda l: l.reshape((-1,) + l.shape[2:]),
-                          ret_g["state"])
-    obj = steal_mod.scatter_rows(obj, lidx, rstate, rmine)
-
-    proc_count = jnp.sum(cnt_b) + jnp.sum(cl_cnt)
-    return obj, out_flat, lv, jnp.sum(cvalid.astype(jnp.int32)), proc_count
-
-
-# ---------------------------------------------------------------------------
-# the engine wrapper
-# ---------------------------------------------------------------------------
 
 class ParsirEngine:
     """Build, initialize and run a PARSIR simulation on a device mesh."""
@@ -468,8 +80,6 @@ class ParsirEngine:
         if model.n_objects % D:
             raise ValueError(f"n_objects={model.n_objects} not divisible by "
                              f"mesh size {D}")
-        if cfg.route == "a2a" and cfg.route_cap % D:
-            raise ValueError("route_cap must be divisible by mesh size for a2a")
         self.placement = equal_placement(model.n_objects, D)
         self.D = D
 
@@ -483,7 +93,7 @@ class ParsirEngine:
         def ingest(state: EngineState, batch: EventBatch) -> EngineState:
             dev = jax.lax.axis_index(AXIS)
             cur = state.epoch[0]
-            cal, fb, cal_ovf, fb_ovf, late = _deliver(
+            cal, fb, cal_ovf, fb_ovf, late = deliver(
                 state.cal, state.fb, batch, cur, dev, self.placement, cfg,
                 init=True)
             st = state.stats

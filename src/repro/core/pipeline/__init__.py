@@ -1,0 +1,46 @@
+"""The engine as a pipeline of composable stages.
+
+PARSIR's epoch step is a fixed pipeline — extract, steal, batch-process,
+route, deliver — and this package gives each stage a narrow interface and a
+registry, so new schedulers / routers / steal policies are small registered
+classes instead of string-dispatched branches inside one monolithic module:
+
+  * :mod:`base`        — stage interfaces, registries, shared engine types;
+  * :mod:`config`      — :class:`EngineConfig` (stage selection + capacities,
+    fail-fast validation);
+  * :mod:`schedulers`  — ``batch`` (PARSIR rounds), ``batch-model`` (model
+    kernel), ``ltf``;
+  * :mod:`routers`     — ``allgather``, ``a2a``;
+  * :mod:`steal`       — ``none``, ``loan``;
+  * :mod:`deliver`     — owner-side calendar/fallback insertion;
+  * :mod:`step`        — :func:`make_step`, the wiring.
+
+Registering a new stage::
+
+    from repro.core.pipeline import Scheduler, register_scheduler
+
+    @register_scheduler("my-sched")
+    class MyScheduler(Scheduler):
+        def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b, lookahead):
+            ...
+
+    EngineConfig(lookahead=0.5, scheduler="my-sched")
+"""
+from . import routers, schedulers, steal  # noqa: F401  (registration imports)
+from .base import (AXIS, ROUTERS, SCHEDULERS, STEAL_POLICIES, EngineState,
+                   Router, Scheduler, Stats, StealPolicy, epoch_of,
+                   register_router, register_scheduler, register_steal_policy,
+                   resolve_router, resolve_scheduler, resolve_steal,
+                   zero_stats)
+from .config import EngineConfig
+from .deliver import deliver
+from .step import make_step
+
+__all__ = [
+    "AXIS", "ROUTERS", "SCHEDULERS", "STEAL_POLICIES",
+    "EngineConfig", "EngineState", "Stats",
+    "Router", "Scheduler", "StealPolicy",
+    "register_router", "register_scheduler", "register_steal_policy",
+    "resolve_router", "resolve_scheduler", "resolve_steal",
+    "epoch_of", "zero_stats", "deliver", "make_step",
+]

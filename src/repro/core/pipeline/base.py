@@ -1,0 +1,200 @@
+"""Stage interfaces and registries for the engine pipeline.
+
+The PARSIR epoch step is architecturally a fixed pipeline
+
+    extract → steal → process → route → deliver
+
+and this module defines the narrow interfaces of its pluggable stages:
+
+  * :class:`Scheduler` — how a device's per-epoch event batch is executed
+    (PARSIR batch rounds, lowest-timestamp-first, or a model-provided whole
+    batch kernel);
+  * :class:`Router` — how emitted events reach their owners (`allgather`
+    broadcast or pairwise `a2a` exchange);
+  * :class:`StealPolicy` — whether/how epoch-granular object loans rebalance
+    load before processing.
+
+Implementations are small registered classes (``@register_scheduler("ltf")``
+…); :class:`~repro.core.pipeline.config.EngineConfig` selects them by name and
+:func:`repro.core.pipeline.step.make_step` only wires them together.  Shared
+engine types (``Stats``, ``EngineState``, epoch arithmetic) live here too so
+every stage module can import them without cycles.
+"""
+from __future__ import annotations
+
+import abc
+import math
+from typing import TYPE_CHECKING, Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..api import SimModel
+from ..calendar import Calendar, Fallback
+from ..events import EventBatch
+from ..placement import Placement
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from .config import EngineConfig
+
+#: mesh axis name of the worker dimension (one program instance per device).
+AXIS = "workers"
+
+
+class Stats(NamedTuple):
+    processed: jax.Array             # events processed on this device
+    cal_overflow: jax.Array          # bucket-capacity overflows (must be 0)
+    fb_overflow: jax.Array           # fallback-capacity overflows (must be 0)
+    route_overflow: jax.Array        # route-capacity overflows (must be 0)
+    late_events: jax.Array           # causality violations (must be 0)
+    lookahead_violations: jax.Array  # model emitted ts < ts_in + L (must be 0)
+    stolen: jax.Array                # loaned batches processed on this device
+
+
+def zero_stats() -> Stats:
+    z = jnp.zeros((1,), jnp.int32)
+    return Stats(z, z, z, z, z, z, z)
+
+
+class EngineState(NamedTuple):
+    cal: Calendar
+    fb: Fallback
+    obj: Any
+    epoch: jax.Array   # i32 [1] per device (identical everywhere)
+    stats: Stats
+
+
+def epoch_of(ts: jax.Array, epoch_len: float) -> jax.Array:
+    return jnp.floor(ts * jnp.float32(1.0 / epoch_len)
+                     if math.log2(1.0 / epoch_len).is_integer()
+                     else ts / jnp.float32(epoch_len)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# stage interfaces
+# ---------------------------------------------------------------------------
+
+#: a scheduler's result: (updated object pytree, flat emitted EventBatch,
+#: lookahead-violation count).
+ProcessResult = tuple[Any, EventBatch, jax.Array]
+
+
+class Scheduler(abc.ABC):
+    """Per-epoch batch execution strategy (pipeline stage 3, paper §II-A)."""
+
+    name: str
+
+    def validate(self, model: SimModel, cfg: "EngineConfig") -> None:
+        """Fail fast at engine construction if the model/config can't run."""
+
+    @abc.abstractmethod
+    def process(self, model: SimModel, obj: Any, ts_s: jax.Array,
+                seed_s: jax.Array, pay_s: jax.Array, cnt_b: jax.Array,
+                lookahead: float) -> ProcessResult:
+        """Apply every object's sorted epoch batch; return emitted events.
+
+        Inputs are the per-object [n_local, cap] arrays of
+        :func:`repro.core.calendar.extract_sorted`.  The returned EventBatch
+        is flat with ``valid`` masks honored downstream — a scheduler may
+        emit 0..``model.max_out`` events per processed event.
+        """
+
+
+class Router(abc.ABC):
+    """Event exchange strategy (pipeline stage 4, paper §II-B)."""
+
+    name: str
+
+    def validate(self, cfg: "EngineConfig", placement: Placement) -> None:
+        """Fail fast at engine construction on bad capacity/topology."""
+
+    @abc.abstractmethod
+    def select_send(self, prod: EventBatch, eligible: jax.Array,
+                    placement: Placement, cfg: "EngineConfig"
+                    ) -> tuple[EventBatch, jax.Array, jax.Array]:
+        """Pick which eligible produced events ride this epoch's exchange.
+
+        Returns (route buffer, sent-mask over ``prod``, overflow count).
+        Unsent valid events are the caller's to park in the fallback buffer.
+        """
+
+    @abc.abstractmethod
+    def exchange(self, buf: EventBatch, placement: Placement,
+                 cfg: "EngineConfig") -> EventBatch:
+        """Run the collective; return the events visible to this device."""
+
+
+class StealPolicy(abc.ABC):
+    """Load-balancing strategy (pipeline stage 2, paper §II-A)."""
+
+    name: str
+
+    @abc.abstractmethod
+    def process(self, model: SimModel, scheduler: Scheduler,
+                cfg: "EngineConfig", placement: Placement, dev: jax.Array,
+                obj: Any, ts_s: jax.Array, seed_s: jax.Array,
+                pay_s: jax.Array, cnt_b: jax.Array
+                ) -> tuple[Any, EventBatch, jax.Array, jax.Array, jax.Array]:
+        """Run stage 2+3 (rebalance, then process).
+
+        Returns (obj, flat emitted EventBatch, lookahead violations,
+        stolen-batch count, processed-event count).
+        """
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+SCHEDULERS: dict[str, Scheduler] = {}
+ROUTERS: dict[str, Router] = {}
+STEAL_POLICIES: dict[str, StealPolicy] = {}
+
+
+def _register(registry: dict, kind: str, name: str) -> Callable:
+    def deco(cls):
+        if name in registry:
+            raise ValueError(f"{kind} {name!r} already registered")
+        cls.name = name
+        registry[name] = cls()
+        return cls
+    return deco
+
+
+def register_scheduler(name: str):
+    """Class decorator: register a :class:`Scheduler` under ``name``."""
+    return _register(SCHEDULERS, "scheduler", name)
+
+
+def register_router(name: str):
+    """Class decorator: register a :class:`Router` under ``name``."""
+    return _register(ROUTERS, "router", name)
+
+
+def register_steal_policy(name: str):
+    """Class decorator: register a :class:`StealPolicy` under ``name``."""
+    return _register(STEAL_POLICIES, "steal policy", name)
+
+
+def resolve_scheduler(cfg: "EngineConfig") -> Scheduler:
+    """EngineConfig → Scheduler.
+
+    The PARSIR ``batch`` scheduler is further split by ``batch_impl``
+    (``rounds`` = vmap loop, ``model`` = the model's whole-batch kernel),
+    preserving the historical config surface; any other name (``ltf``, or a
+    user-registered scheduler) is looked up directly.
+    """
+    if cfg.scheduler == "batch":
+        return SCHEDULERS["batch-model" if cfg.batch_impl == "model"
+                          else "batch"]
+    return SCHEDULERS[cfg.scheduler]
+
+
+def resolve_router(name: str) -> Router:
+    return ROUTERS[name]
+
+
+def resolve_steal(cfg: "EngineConfig", n_devices: int) -> StealPolicy:
+    if cfg.steal and n_devices > 1:
+        return STEAL_POLICIES["loan"]
+    return STEAL_POLICIES["none"]

@@ -1,0 +1,91 @@
+"""EngineConfig: the stage-selection + capacity record of the pipeline.
+
+Everything an engine build needs to know that isn't the model or the mesh.
+Stage names (``scheduler``, ``route``) are registry keys resolved by
+:mod:`repro.core.pipeline.base`; unknown names and degenerate capacities fail
+at *construction* time.  The one check that needs the device count —
+``route_cap >= n_devices`` for a2a, without which the per-pair sub-buffers
+would be zero-sized and every event would silently spill to fallback — lives
+in :meth:`EngineConfig.validate` and is invoked by the engine (and the a2a
+router) as soon as the mesh is known.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    lookahead: float                 # model lookahead L
+    epoch_len: float | None = None   # defaults to L; may be a fraction of it
+    n_buckets: int = 8               # N — calendar epochs in flight
+    bucket_cap: int = 128            # events per (object, bucket)
+    route_cap: int = 4096            # outgoing events per device per epoch
+    fallback_cap: int = 4096         # per-device fallback list capacity
+    route: str = "allgather"         # Router registry key (allgather | a2a)
+    scheduler: str = "batch"         # Scheduler registry key (batch | ltf | …)
+    batch_impl: str = "rounds"       # rounds (vmap) | model (Pallas kernel)
+    steal: bool = False
+    steal_cap: int = 4               # loans a donor may publish per epoch
+    claim_cap: int = 4               # loans a receiver may claim per epoch
+
+    def __post_init__(self):
+        el = self.epoch_len if self.epoch_len is not None else self.lookahead
+        if el > self.lookahead + 1e-9:
+            raise ValueError("epoch_len must be <= lookahead (conservative)")
+        object.__setattr__(self, "epoch_len", el)
+
+        caps = ["n_buckets", "bucket_cap", "route_cap", "fallback_cap"]
+        if self.steal:
+            caps += ["steal_cap", "claim_cap"]  # 0 would silently never steal
+        for cap in caps:
+            if getattr(self, cap) < 1:
+                raise ValueError(f"{cap} must be >= 1, got {getattr(self, cap)}")
+        if self.batch_impl not in ("rounds", "model"):
+            raise ValueError(f"unknown batch_impl {self.batch_impl!r} "
+                             "(choose from ['rounds', 'model'])")
+
+        # stage-name validation against the registries (populated on package
+        # import; imported lazily here so config stays cycle-free).
+        from . import routers, schedulers  # noqa: F401  (registration import)
+        from .base import ROUTERS, SCHEDULERS
+        if self.route not in ROUTERS:
+            raise ValueError(f"unknown route {self.route!r} "
+                             f"(choose from {sorted(ROUTERS)})")
+        known = sorted(set(SCHEDULERS) - {"batch-model"} | {"batch"})
+        if self.scheduler == "batch-model":
+            # internal registry name — selecting it directly would let
+            # scheduler and batch_impl disagree about what executes.
+            raise ValueError("scheduler 'batch-model' is internal; use "
+                             "scheduler='batch' with batch_impl='model'")
+        if self.scheduler != "batch" and self.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             f"(choose from {known})")
+        if self.batch_impl == "model" and self.scheduler != "batch":
+            raise ValueError(
+                f"batch_impl='model' requires scheduler='batch' — with "
+                f"scheduler={self.scheduler!r} the model kernel would "
+                "silently never run")
+        if self.steal and (self.scheduler != "batch"
+                           or self.batch_impl != "rounds"):
+            # loaned batches are concatenated onto the local extract and run
+            # through the batch-rounds loop; silently ignoring another
+            # scheduler would change semantics with no Stats counter set.
+            raise ValueError(
+                f"steal=True only supports scheduler='batch' with "
+                f"batch_impl='rounds' (got scheduler={self.scheduler!r}, "
+                f"batch_impl={self.batch_impl!r})")
+
+    def validate(self, n_devices: int) -> None:
+        """Device-count-dependent fail-fast checks (engine construction)."""
+        if self.route == "a2a":
+            if self.route_cap < n_devices:
+                raise ValueError(
+                    f"route_cap={self.route_cap} must be >= n_devices="
+                    f"{n_devices} for a2a routing — the per-pair sub-buffer "
+                    "(route_cap // n_devices) would be empty and every event "
+                    "would spill to fallback instead of being exchanged")
+            if self.route_cap % n_devices:
+                raise ValueError(
+                    f"route_cap={self.route_cap} must be divisible by mesh "
+                    f"size {n_devices} for a2a")

@@ -1,0 +1,38 @@
+"""Delivery stage: insertion at the owner (paper §II-B, pipeline stage 5).
+
+Owners insert routed in-horizon events into calendar buckets (conflict-free
+scatter) and park beyond-horizon events in the fallback buffer.  Capacity
+overflow and late (already-closed-epoch) arrivals are counted, never silent.
+Delivery is the same code for the per-epoch step and the initial-event ingest
+(``init=True`` widens the window to include the current epoch).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..calendar import Calendar, Fallback, fallback_put, insert
+from ..events import EventBatch
+from ..placement import Placement
+from .base import epoch_of
+
+
+def deliver(cal: Calendar, fb: Fallback, batch: EventBatch, cur, dev,
+            placement: Placement, cfg, init: bool):
+    """Insert my in-horizon events; park my beyond-horizon events in fallback."""
+    N = cfg.n_buckets
+    epochs = epoch_of(batch.ts, cfg.epoch_len)
+    boundaries = jnp.asarray(placement.boundaries, jnp.int32)
+    owner = placement.owner(batch.dst)
+    mine = batch.valid & (owner == dev)
+    lo = jnp.int32(0) if init else cur + 1
+    hi = cur + (N - 1 if init else N)
+    insertable = mine & (epochs >= lo) & (epochs <= hi)
+    beyond = mine & (epochs > hi)
+    late = jnp.sum((mine & (epochs < lo)).astype(jnp.int32))
+
+    local_idx = jnp.clip(batch.dst - boundaries[dev], 0, cal.n_local - 1)
+    cal, cal_ovf = insert(cal, local_idx, epochs, batch.ts, batch.seed,
+                          batch.payload, insertable)
+    fb, fb_ovf = fallback_put(fb, EventBatch(batch.dst, batch.ts, batch.seed,
+                                             batch.payload, beyond))
+    return cal, fb, cal_ovf, fb_ovf, late

@@ -1,0 +1,86 @@
+"""The per-device epoch step: pure wiring of the pipeline stages.
+
+    extract → steal → process → route → deliver  (+ stats accumulation)
+
+Stage behavior lives behind the :mod:`repro.core.pipeline.base` interfaces;
+:func:`make_step` resolves the configured Scheduler / Router / StealPolicy
+once, runs their fail-fast validation, and returns the jittable step closure
+the engine shard_maps over the mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..api import SimModel
+from ..calendar import Fallback, extract_sorted
+from ..events import compact_mask, concat_batches, truncate
+from ..placement import Placement
+from . import routers, schedulers, steal  # noqa: F401  (registration imports)
+from .base import (AXIS, EngineState, Stats, epoch_of, resolve_router,
+                   resolve_scheduler, resolve_steal)
+from .config import EngineConfig
+from .deliver import deliver
+
+
+def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
+              ) -> Callable[[EngineState], EngineState]:
+    D = placement.n_devices
+    N = cfg.n_buckets
+
+    scheduler = resolve_scheduler(cfg)
+    router = resolve_router(cfg.route)
+    policy = resolve_steal(cfg, D)
+    scheduler.validate(model, cfg)
+    router.validate(cfg, placement)
+
+    def step(state: EngineState) -> EngineState:
+        dev = jax.lax.axis_index(AXIS)
+        cur = state.epoch[0]
+
+        # 1. extract — drain the calendar bucket of the current epoch.
+        cal, ts_s, seed_s, pay_s, cnt_b = extract_sorted(state.cal, cur)
+
+        # 2.+3. steal + process — the policy runs the scheduler (possibly on
+        # loan-augmented batches) and reports emitted events + counts.
+        obj, out_flat, lv, stolen, proc_count = policy.process(
+            model, scheduler, cfg, placement, dev, state.obj,
+            ts_s, seed_s, pay_s, cnt_b)
+
+        # 4. route — producer-side triage (fresh events + fallback entries),
+        # selection against the route capacity, then the exchange collective.
+        prod = concat_batches(out_flat, state.fb.events)
+        epochs = epoch_of(prod.ts, cfg.epoch_len)
+        eligible = prod.valid & (epochs >= cur + 1) & (epochs <= cur + N)
+        late_prod = prod.valid & (epochs <= cur)
+        n_late_prod = jnp.sum(late_prod.astype(jnp.int32))
+
+        route_buf, send, route_ovf = router.select_send(prod, eligible,
+                                                        placement, cfg)
+
+        keep = prod.valid & ~send & ~late_prod
+        kept = compact_mask(prod, keep)
+        fb = Fallback(truncate(kept, cfg.fallback_cap))
+        fb_ovf = jnp.sum(kept.valid[cfg.fallback_cap:].astype(jnp.int32))
+
+        routed = router.exchange(route_buf, placement, cfg)
+
+        # 5. deliver — owners insert into calendar buckets / fallback.
+        cal, fb, cal_ovf, fb_ovf2, late2 = deliver(
+            cal, fb, routed, cur, dev, placement, cfg, init=False)
+
+        st = state.stats
+        stats = Stats(
+            processed=st.processed + proc_count,
+            cal_overflow=st.cal_overflow + cal_ovf,
+            fb_overflow=st.fb_overflow + fb_ovf + fb_ovf2,
+            route_overflow=st.route_overflow + route_ovf,
+            late_events=st.late_events + n_late_prod + late2,
+            lookahead_violations=st.lookahead_violations + lv,
+            stolen=st.stolen + stolen,
+        )
+        return EngineState(cal, fb, obj, state.epoch + 1, stats)
+
+    return step

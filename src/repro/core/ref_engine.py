@@ -6,6 +6,13 @@ parallel PARSIR engine (any device count, any routing strategy, stealing on or
 off) must produce the *identical* multiset of processed events and — with the
 dyadic increment distribution — bit-identical object state.  This oracle is the
 correctness anchor for every integration test.
+
+Event flow is variable-arity, mirroring the engine's generalized contract:
+``process_event_np`` may return a single event dict (the legacy one-out
+shape), a list of 0..``model.max_out`` event dicts (multi-emission / open
+networks), or nothing at all (absorption — sinks).  Entries carrying
+``valid: False`` are skipped, matching the engine's ``EmittedEvents.valid``
+masks.
 """
 from __future__ import annotations
 
@@ -45,9 +52,25 @@ def _sorted_rec(records: list[tuple]) -> np.ndarray:
     return rec.reshape(-1, 2) if rec.size else rec.reshape(0, 2)
 
 
+def as_emitted(out: Any) -> list[dict]:
+    """Normalize a model's emitted events to a list of valid event dicts.
+
+    Accepted shapes: ``None`` / ``[]`` (absorption), a single event dict
+    (the legacy exactly-one-out contract), or a list of event dicts.  Events
+    with an explicit ``valid: False`` are dropped — the numpy face of the
+    engine's ``EmittedEvents.valid`` mask.
+    """
+    if out is None:
+        return []
+    if isinstance(out, dict):
+        out = [out]
+    return [e for e in out if e.get("valid", True)]
+
+
 def run_sequential(model: Any, n_epochs: int, epoch_len: float) -> SequentialResult:
     """Run until simulation time ``n_epochs * epoch_len`` (exclusive)."""
     horizon = np.float32(n_epochs) * np.float32(epoch_len)
+    max_out = getattr(model, "max_out", 1)
     res = SequentialResult(model.n_objects)
     state = model.init_object_state_np(np.arange(model.n_objects))
 
@@ -64,8 +87,15 @@ def run_sequential(model: Any, n_epochs: int, epoch_len: float) -> SequentialRes
         res.processed_records.append((int(dst), int(seed)))
         out = model.process_event_np(state[dst], np.float32(ts),
                                      np.uint32(seed), np.float32(payload))
-        heapq.heappush(heap, (np.float32(out["ts"]), int(out["seed"]),
-                              int(out["dst"]), np.float32(out["payload"])))
+        emitted = as_emitted(out)
+        if len(emitted) > max_out:
+            raise ValueError(
+                f"model emitted {len(emitted)} events > max_out={max_out} — "
+                "the engine's fixed-size emission buffers cannot represent "
+                "this; raise the model's max_out")
+        for e in emitted:
+            heapq.heappush(heap, (np.float32(e["ts"]), int(e["seed"]),
+                                  int(e["dst"]), np.float32(e["payload"])))
 
     res.pending_records = [(int(dst), int(seed)) for _, seed, dst, _ in heap]
     res.obj_state = state

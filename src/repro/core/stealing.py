@@ -14,6 +14,10 @@ routing.  Ownership (calendars, future insertions) never moves.
 
 Everything is static-shape: ``steal_cap`` loans per donor, ``claim_cap`` claims
 per receiver; unassigned loans are simply processed by their owner as usual.
+
+This module is the combinatorial loan math (donor selection, replicated
+planning, row gather/scatter); the pipeline stage that wires it around batch
+processing is :class:`repro.core.pipeline.steal.LoanSteal`.
 """
 from __future__ import annotations
 

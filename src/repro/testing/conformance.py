@@ -17,7 +17,11 @@ parts:
 
 ``SWEEP`` names the engine-config axes of the zoo: scheduler (batch | ltf),
 routing (allgather | a2a), stealing on/off, per-object batch implementation
-(vmap rounds | Pallas model kernel), and fractional epoch length.
+(vmap rounds | Pallas model kernel), and fractional epoch length.  The
+checks are emission-arity-agnostic: workloads with fan-out (``max_out > 1``)
+and absorption (events that emit nothing — the pending multiset *shrinks*)
+run through the identical assertions, since the generalized oracle
+(:func:`repro.core.ref_engine.run_sequential`) iterates emitted-event lists.
 
 The module doubles as the multi-device driver (device count is locked at
 first JAX init, so multi-device sweeps run in a subprocess)::

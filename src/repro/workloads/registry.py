@@ -23,6 +23,7 @@ WORKLOADS = {
     "phold-hotspot": "hotspot",
     "queueing": "queueing",
     "cluster": "cluster",
+    "open-queueing": "open_queueing",
 }
 
 

@@ -1,0 +1,129 @@
+"""Open-network event flow: multi-emission (max_out = 2) and absorption.
+
+The open-queueing workload is the end-to-end proof of the generalized
+emission contract; its full oracle-differential sweep lives in
+test_workloads.py.  This file covers the semantics the sweep can't see:
+
+* absorption actually *drains* — with a per-source job budget the whole
+  network empties (`in_flight` → 0) and the flow-conservation ledger
+  (sources → forks ×2 → sinks) balances exactly;
+* `max_out > 1` traffic overflows capacities *accountably* (route_overflow /
+  fb_overflow counters, never silent loss);
+* the oracle-side normalization (`as_emitted`) of the variable-arity numpy
+  contract: single dict, list, empty, and `valid: False` entries.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, ParsirEngine
+from repro.core.ref_engine import as_emitted, run_sequential
+from repro.workloads.registry import get_workload
+
+DRAIN_KW = dict(n_sources=2, n_stage1=2, n_forks=2, n_stage2=2, n_sinks=2,
+                lookahead=0.5, dist="dyadic", max_jobs=2)
+
+
+def _engine(model, **cfg_kw):
+    kw = dict(lookahead=model.params.lookahead, n_buckets=8, bucket_cap=64,
+              route_cap=512, fallback_cap=512)
+    kw.update(cfg_kw)
+    return ParsirEngine(model, EngineConfig(**kw))
+
+
+def test_absorbing_network_drains_to_empty():
+    model = get_workload("open-queueing", **DRAIN_KW)
+    eng = _engine(model)
+    st = eng.run(eng.init(), 48)
+    tot = eng.totals(st)
+    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
+                    "late_events", "lookahead_violations"):
+        assert tot[counter] == 0, (counter, tot)
+
+    # every event was absorbed: nothing in calendar or fallback.
+    assert eng.in_flight(st) == 0
+
+    # flow conservation: S sources × max_jobs jobs, each forked into 2 —
+    # firings(4) + stage1(4) + fork(4) + stage2(8) + sink(8).
+    S, J = DRAIN_KW["n_sources"], DRAIN_KW["max_jobs"]
+    jobs = S * J
+    assert tot["processed"] == S * J + jobs + jobs + 2 * jobs + 2 * jobs
+
+    # per-role ledgers in the final object state.
+    obj = {k: np.asarray(v) for k, v in st.obj.items()}
+    kind = obj["kind"]
+    assert obj["count"][kind == 0].sum() == S * J         # source firings
+    assert obj["count"][kind == 2].sum() == jobs          # fork passes
+    assert obj["count"][kind == 4].sum() == 2 * jobs      # sink absorptions
+    assert np.all(obj["sojourn"][kind == 4] >= 0)
+
+
+def test_drained_network_matches_oracle_bit_exact():
+    model = get_workload("open-queueing", **DRAIN_KW)
+    eng = _engine(model)
+    st = eng.run(eng.init(), 48)
+    ref = run_sequential(model, 48, eng.cfg.epoch_len)
+    assert eng.totals(st)["processed"] == ref.total_processed
+    assert len(ref.pending_records) == 0
+    want = {k: np.stack([np.asarray(s[k]) for s in ref.obj_state])
+            for k in ref.obj_state[0]}
+    for k, v in want.items():
+        np.testing.assert_array_equal(np.asarray(st.obj[k]), v,
+                                      err_msg=f"object state [{k}]")
+
+
+def test_max_out_traffic_overflow_is_accounted():
+    # an undersized route capacity against fan-out traffic must *count*
+    # route overflow (events recirculate via fallback, never vanish) …
+    model = get_workload("open-queueing", n_sources=4, n_stage1=4, n_forks=4,
+                         n_stage2=4, n_sinks=4, lookahead=0.5, dist="dyadic")
+    eng = _engine(model, route_cap=4, fallback_cap=4096)
+    tot = eng.totals(eng.run(eng.init(), 16))
+    assert tot["route_overflow"] > 0
+    # … and an undersized fallback on top of that counts fb overflow.
+    eng2 = _engine(model, route_cap=4, fallback_cap=4)
+    tot2 = eng2.totals(eng2.run(eng2.init(), 16))
+    assert tot2["fb_overflow"] > 0
+
+
+# ---------------------------------------------------------------------------
+# oracle-side emission normalization
+# ---------------------------------------------------------------------------
+
+def test_as_emitted_normalization():
+    e = {"dst": 1, "ts": 2.0, "seed": 3, "payload": 0.0}
+    assert as_emitted(None) == []
+    assert as_emitted([]) == []
+    assert as_emitted(e) == [e]                      # legacy single-dict
+    assert as_emitted([e, e]) == [e, e]              # multi-emission
+    assert as_emitted([dict(e, valid=False), e]) == [e]   # masked lane
+    assert as_emitted(dict(e, valid=True)) == [dict(e, valid=True)]
+
+
+def test_oracle_enforces_max_out():
+    class TwoOutLiar:
+        n_objects = 1
+        max_out = 1
+
+        def init_object_state_np(self, gids):
+            return [{} for _ in gids]
+
+        def initial_events(self):
+            return {"dst": np.zeros(1, np.int32),
+                    "ts": np.zeros(1, np.float32),
+                    "seed": np.zeros(1, np.uint32),
+                    "payload": np.zeros(1, np.float32)}
+
+        def process_event_np(self, st, ts, seed, payload):
+            e = {"dst": 0, "ts": float(ts) + 1.0, "seed": 1, "payload": 0.0}
+            return [e, dict(e, seed=2)]              # 2 events > max_out=1
+
+    with pytest.raises(ValueError, match="max_out"):
+        run_sequential(TwoOutLiar(), 4, 1.0)
+
+
+def test_degenerate_role_counts_rejected():
+    with pytest.raises(ValueError, match="n_objects >= 5"):
+        get_workload("open-queueing", n_objects=4)
+    with pytest.raises(ValueError, match="n_sinks"):
+        get_workload("open-queueing", n_sources=1, n_stage1=1, n_forks=1,
+                     n_stage2=1, n_sinks=0)

@@ -1,0 +1,178 @@
+"""The pipeline decomposition contract (repro/core/pipeline):
+
+* stage registries carry the built-ins; unknown stage names fail at
+  EngineConfig *construction* time, not deep inside a trace;
+* a user-registered Scheduler is selectable by name and round-trips the
+  whole engine (identical results to the built-in it wraps);
+* the a2a capacity validation fails fast instead of silently spilling every
+  event to fallback (route_cap // D == 0 regression);
+* event-batch helpers (compact_mask / concat_batches / truncate) preserve
+  the valid-event multiset — the algebra `route` and `deliver` stages lean
+  on (property-style over seeded random batches, no hypothesis dependency).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, ParsirEngine
+from repro.core.events import (EventBatch, compact, compact_mask,
+                               concat_batches, truncate)
+from repro.core.pipeline import (ROUTERS, SCHEDULERS, STEAL_POLICIES,
+                                 Scheduler, register_scheduler,
+                                 resolve_scheduler)
+from repro.core.pipeline.schedulers import process_batch_rounds
+from repro.workloads.registry import get_workload
+
+
+# ---------------------------------------------------------------------------
+# registries + construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_builtin_stages_registered():
+    assert {"batch", "batch-model", "ltf"} <= set(SCHEDULERS)
+    assert {"allgather", "a2a"} <= set(ROUTERS)
+    assert {"none", "loan"} <= set(STEAL_POLICIES)
+
+
+@pytest.mark.parametrize("bad_kw", [dict(route="bogus"),
+                                    dict(scheduler="bogus"),
+                                    dict(batch_impl="bogus"),
+                                    dict(route_cap=0),
+                                    dict(n_buckets=0),
+                                    dict(steal=True, steal_cap=0),
+                                    dict(steal=True, claim_cap=0)])
+def test_unknown_or_degenerate_config_fails_at_construction(bad_kw):
+    with pytest.raises(ValueError):
+        EngineConfig(lookahead=0.5, **bad_kw)
+
+
+def test_a2a_route_cap_validation_fails_fast():
+    # pair_cap = route_cap // D == 0 used to silently drop every event into
+    # overflow; now the engine-side validation refuses the config outright.
+    cfg = EngineConfig(lookahead=0.5, route="a2a", route_cap=2)
+    with pytest.raises(ValueError, match="route_cap"):
+        cfg.validate(n_devices=4)
+    # divisible-and-large-enough passes
+    EngineConfig(lookahead=0.5, route="a2a", route_cap=8).validate(4)
+
+
+def test_resolve_scheduler_batch_impl_split():
+    assert resolve_scheduler(EngineConfig(lookahead=0.5)).name == "batch"
+    assert resolve_scheduler(
+        EngineConfig(lookahead=0.5, batch_impl="model")).name == "batch-model"
+    assert resolve_scheduler(
+        EngineConfig(lookahead=0.5, scheduler="ltf")).name == "ltf"
+
+
+def test_model_kernel_scheduler_requires_process_batch():
+    model = get_workload("cluster", n_nodes=8, n_rings=2)  # no process_batch
+    cfg = EngineConfig(lookahead=0.5, batch_impl="model", n_buckets=8,
+                       bucket_cap=32, route_cap=128, fallback_cap=128)
+    with pytest.raises(ValueError, match="process_batch"):
+        ParsirEngine(model, cfg)
+
+
+def test_custom_registered_scheduler_runs_end_to_end():
+    # registering a Scheduler class and selecting it by EngineConfig name is
+    # the whole extension story — prove it round-trips the engine with
+    # results identical to the built-in it delegates to.
+    if "test-echo" not in SCHEDULERS:
+        @register_scheduler("test-echo")
+        class EchoScheduler(Scheduler):
+            def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b,
+                        lookahead):
+                return process_batch_rounds(model, obj, ts_s, seed_s, pay_s,
+                                            cnt_b, lookahead)
+
+    model = get_workload("phold", n_objects=16, initial_events=4,
+                         state_nodes=64, realloc_fraction=0.02,
+                         lookahead=0.5, dist="dyadic")
+    kw = dict(lookahead=0.5, n_buckets=8, bucket_cap=64, route_cap=512,
+              fallback_cap=512)
+    eng_a = ParsirEngine(model, EngineConfig(**kw))
+    eng_b = ParsirEngine(model, EngineConfig(scheduler="test-echo", **kw))
+    tot_a = eng_a.totals(eng_a.run(eng_a.init(), 12))
+    tot_b = eng_b.totals(eng_b.run(eng_b.init(), 12))
+    assert tot_a == tot_b
+    assert tot_a["processed"] > 0
+
+
+def test_inconsistent_stage_combinations_fail_at_construction():
+    # loan stealing always processes through the batch-rounds loop; pairing
+    # it with another scheduler/impl must refuse (device-independently, at
+    # config construction) rather than silently ignore the setting.
+    for bad in (dict(steal=True, scheduler="ltf"),
+                dict(steal=True, batch_impl="model")):
+        with pytest.raises(ValueError, match="steal"):
+            EngineConfig(lookahead=0.5, **bad)
+    # batch_impl='model' under a non-batch scheduler would silently never
+    # invoke the model kernel.
+    with pytest.raises(ValueError, match="batch_impl"):
+        EngineConfig(lookahead=0.5, scheduler="ltf", batch_impl="model")
+    # the internal 'batch-model' registry name is not directly selectable.
+    with pytest.raises(ValueError, match="internal"):
+        EngineConfig(lookahead=0.5, scheduler="batch-model")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_scheduler("batch")
+        class Clash(Scheduler):  # pragma: no cover - never instantiated
+            def process(self, *a):
+                ...
+
+
+# ---------------------------------------------------------------------------
+# event-batch algebra: valid-multiset preservation (property-style)
+# ---------------------------------------------------------------------------
+
+def _rand_batch(rng, n):
+    return EventBatch(
+        dst=jnp.asarray(rng.integers(0, 50, n), jnp.int32),
+        ts=jnp.asarray(rng.integers(0, 1024, n) / 1024.0, jnp.float32),
+        seed=jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32)),
+        payload=jnp.asarray(rng.integers(0, 7, n), jnp.float32),
+        valid=jnp.asarray(rng.random(n) < 0.6),
+    )
+
+
+def _multiset(b: EventBatch):
+    v = np.asarray(b.valid)
+    return sorted(zip(np.asarray(b.dst)[v].tolist(),
+                      np.asarray(b.ts)[v].tolist(),
+                      np.asarray(b.seed)[v].tolist(),
+                      np.asarray(b.payload)[v].tolist()))
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_event_batch_algebra_preserves_valid_multiset(trial):
+    # deterministic always-running counterpart of the hypothesis properties
+    # in test_property.py (which skip when hypothesis isn't installed).
+    rng = np.random.default_rng(100 + trial)
+    a = _rand_batch(rng, int(rng.integers(1, 48)))
+    b = _rand_batch(rng, int(rng.integers(1, 48)))
+
+    # concat is multiset union
+    cat = concat_batches(a, b)
+    assert _multiset(cat) == sorted(_multiset(a) + _multiset(b))
+
+    # compact_mask keeps exactly the selected sub-multiset, front-compacted
+    # in stable order (the engine always selects a subset: send ⊆ valid).
+    mask = jnp.asarray(rng.random(cat.capacity) < 0.5) & cat.valid
+    sel = compact_mask(cat, mask)
+    assert _multiset(sel) == _multiset(cat._replace(valid=cat.valid & mask))
+    v = np.asarray(sel.valid)
+    k = int(v.sum())
+    assert np.all(v[:k]) and not np.any(v[k:])
+    np.testing.assert_array_equal(np.asarray(sel.dst)[:k],
+                                  np.asarray(cat.dst)[np.asarray(mask)])
+
+    # truncate-after-compact partitions the multiset: kept + countable drops
+    # — exactly how the route/fallback stages account overflow.
+    c = compact(cat)
+    cap = int(rng.integers(1, c.capacity + 1))
+    kept, spilled = truncate(c, cap), np.asarray(c.valid)[cap:]
+    total = len(_multiset(cat))
+    assert len(_multiset(kept)) + int(spilled.sum()) == total
+    if cap >= total:
+        assert _multiset(kept) == _multiset(cat)

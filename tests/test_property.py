@@ -1,6 +1,8 @@
 """Hypothesis property tests for the system invariants:
 
 * calendar insert/extract conserves events and never reorders per object;
+* the event-batch algebra (compact_mask / concat_batches / truncate) the
+  route/deliver stages lean on preserves the valid-event multiset;
 * the arena stack allocator keeps the free-region invariant and LIFO reuse;
 * placement is a partition (every object owned by exactly one device);
 * the loan planner never over-assigns receivers and is donor/receiver disjoint.
@@ -53,6 +55,61 @@ def test_calendar_conserves_and_orders(events):
                 assert np.all(np.diff(row) >= 0), "per-object ts order violated"
             seen += k
     assert seen == len(events)
+
+
+_batch_rows = st.lists(
+    st.tuples(st.integers(0, 40),            # dst
+              st.integers(0, 1023),          # ts grid point
+              st.integers(0, 2**32 - 1),     # seed
+              st.booleans(),                 # valid
+              st.booleans()),                # mask
+    min_size=1, max_size=48)
+
+
+def _mk_batch(rows):
+    return ev.EventBatch(
+        dst=jnp.asarray([r[0] for r in rows], jnp.int32),
+        ts=jnp.asarray([r[1] / 1024.0 for r in rows], jnp.float32),
+        seed=jnp.asarray([r[2] for r in rows], jnp.uint32),
+        payload=jnp.zeros((len(rows),), jnp.float32),
+        valid=jnp.asarray([r[3] for r in rows]),
+    )
+
+
+def _valid_multiset(b):
+    v = np.asarray(b.valid)
+    return sorted(zip(np.asarray(b.dst)[v].tolist(),
+                      np.asarray(b.ts)[v].tolist(),
+                      np.asarray(b.seed)[v].tolist()))
+
+
+@given(_batch_rows)
+def test_compact_mask_preserves_valid_multiset(rows):
+    b = _mk_batch(rows)
+    mask = jnp.asarray([r[4] for r in rows]) & b.valid
+    out = ev.compact_mask(b, mask)
+    assert _valid_multiset(out) == _valid_multiset(
+        b._replace(valid=b.valid & mask))
+    v = np.asarray(out.valid)
+    k = int(v.sum())
+    assert np.all(v[:k]) and not np.any(v[k:])
+
+
+@given(_batch_rows, _batch_rows)
+def test_concat_batches_preserves_valid_multiset(rows_a, rows_b):
+    a, b = _mk_batch(rows_a), _mk_batch(rows_b)
+    assert _valid_multiset(ev.concat_batches(a, b)) == \
+        sorted(_valid_multiset(a) + _valid_multiset(b))
+
+
+@given(_batch_rows, st.integers(1, 64))
+def test_truncate_partitions_valid_multiset(rows, cap):
+    b = ev.compact(_mk_batch(rows))
+    kept = ev.truncate(b, cap)
+    n_spill = int(np.asarray(b.valid)[cap:].sum())
+    assert len(_valid_multiset(kept)) + n_spill == len(_valid_multiset(b))
+    if n_spill == 0:
+        assert _valid_multiset(kept) == _valid_multiset(b)
 
 
 @given(st.lists(st.integers(0, 63), min_size=1, max_size=16, unique=True))
