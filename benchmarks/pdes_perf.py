@@ -37,10 +37,22 @@ _CHILD = textwrap.dedent("""
     if wname in ("phold", "phold-hotspot"):
         model_kw.update(initial_events=spec["m"], state_nodes=spec["s"],
                         realloc_fraction=0.004)
-    if wname == "phold":
-        model_kw.update(hot_objects=spec.get("hot_o", 0),
-                        hot_prob=spec.get("hot_p", 0))
-    model = get_workload(wname, **model_kw)
+        # hot_o/hot_p ladder overrides apply to BOTH phold workloads (the
+        # hotspot ladder used to silently run with default hot params).
+        if "hot_o" in spec:
+            model_kw["hot_objects"] = spec["hot_o"]
+        if "hot_p" in spec:
+            model_kw["hot_prob"] = spec["hot_p"]
+    try:
+        model = get_workload(wname, **model_kw)
+    except TypeError as e:
+        # unknown model_kw keys must fail fast and loudly, never be dropped.
+        # Anything other than a bad-kwarg TypeError is a real bug: keep its
+        # traceback instead of mislabeling it as a spec problem.
+        if "unexpected keyword argument" not in str(e):
+            raise
+        raise SystemExit(f"bad model_kw for workload {wname!r}: {e} "
+                         f"(keys: {sorted(model_kw)})")
     cfg = EngineConfig(lookahead=spec["la"],
                        epoch_len=spec.get("epoch_len"),
                        n_buckets=32, bucket_cap=spec.get("bucket_cap", 256),
@@ -48,7 +60,11 @@ _CHILD = textwrap.dedent("""
                        route=spec["route"], scheduler=spec.get("sched","batch"),
                        steal=spec.get("steal", False), steal_cap=8,
                        claim_cap=16,
-                       batch_impl=spec.get("batch_impl", "rounds"))
+                       batch_impl=spec.get("batch_impl", "rounds"),
+                       placement=spec.get("placement", "equal"),
+                       rebalance_every=spec.get("rebalance_every", 0),
+                       migrate_cap=spec.get("migrate_cap", 16),
+                       placement_slack=spec.get("placement_slack", 2.0))
     eng = ParsirEngine(model, cfg, mesh=mesh)
     st = eng.run(eng.init(), spec.get("warm", 6))
     base = eng.totals(st)["processed"]
@@ -65,12 +81,23 @@ _CHILD = textwrap.dedent("""
         ex = D * D * spec["route_cap"] * rec_b          # D bufs to D devices
     else:
         ex = D * spec["route_cap"] * rec_b              # pairwise a2a
-    if spec.get("steal"):
+    def state_bytes():
         # per-object state bytes, generic over workloads: one object's pytree.
         st0 = model.init_object_state(np.arange(1))
-        state_b = sum(np.asarray(l).nbytes for l in jax.tree.leaves(st0)) + 8
-        loan_b = 8 * (cfg.bucket_cap * 12 + state_b)
+        return sum(np.asarray(l).nbytes for l in jax.tree.leaves(st0)) + 8
+    if spec.get("steal"):
+        loan_b = 8 * (cfg.bucket_cap * 12 + state_bytes())
         ex += 2 * D * D * loan_b                        # publish + return
+    if spec.get("rebalance_every"):
+        # migration all_gather: up to K whole rows (calendar + state) per
+        # device, broadcast D-wide, amortized over the rebalance period.
+        K = 2 * (cfg.migrate_cap // 2)
+        row_b = (cfg.n_buckets * cfg.bucket_cap * 12 + cfg.n_buckets * 4
+                 + state_bytes() + 4)
+        ex += D * D * K * row_b // spec["rebalance_every"]
+    # rebalances: every device reports each firing — normalize to firings so
+    # the recorded counter partitions like processed/stolen/migrated do.
+    tot["rebalances"] //= D
     print(json.dumps({"ev_s": n / dt, "n": n, "dt": dt, "stats": tot,
                       "exchange_bytes_per_epoch": ex}))
 """)
@@ -92,8 +119,10 @@ BENCH_MODEL_KW = {
 
 
 def run_child(devices: int, workload: str, **spec):
+    model_kw = dict(BENCH_MODEL_KW.get(workload, {}),
+                    **spec.pop("model_kw", {}))
     merged = dict(BASE, devices=devices, workload=workload,
-                  model_kw=BENCH_MODEL_KW.get(workload, {}), **spec)
+                  model_kw=model_kw, **spec)
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = "src"
@@ -125,9 +154,31 @@ def build_ladder(workload: str):
             ("steal_off", dict(route="a2a", bucket_cap=512)),
             ("steal_on", dict(route="a2a", bucket_cap=512, steal=True)),
         ]
+    if workload == "phold-hotspot":
+        # the placement ladder: static knapsack from the model's weight hint,
+        # runtime rebalancing, and rebalancing composed with loans — measured
+        # against the equal-placement `steal_off` rung above.
+        pl = dict(route="a2a", bucket_cap=512, placement_slack=1.5)
+        ladder += [
+            ("placement_weighted", dict(pl, placement="weighted")),
+            ("placement_adaptive", dict(pl, placement="adaptive",
+                                        rebalance_every=4, migrate_cap=64)),
+            ("placement_adaptive_steal",
+             dict(pl, placement="adaptive", rebalance_every=4,
+                  migrate_cap=64, steal=True)),
+        ]
     ladder.append(("ltf_reference_scheduler",
                    dict(route="a2a", sched="ltf", epochs=10, warm=2)))
     return ladder
+
+
+#: tiny CI-smoke scale: every ladder rung must *run* (drivers rot silently
+#: otherwise), wall time a few seconds per rung.
+SMOKE = dict(o=64, m=8, s=64, epochs=6, warm=2, route_cap=4096)
+
+
+def build_smoke_ladder(workload: str):
+    return [(n, dict(s, **SMOKE)) for n, s in build_ladder(workload)]
 
 
 def main():
@@ -135,29 +186,41 @@ def main():
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--workload", default="phold",
                     help="registered zoo workload (repro/workloads)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, exit nonzero on any rung error "
+                         "(CI guard against benchmark-driver rot)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     D = args.devices
-    out = args.out or (f"artifacts/pdes_perf.json" if args.workload == "phold"
+    out = args.out or ("artifacts/pdes_perf.json" if args.workload == "phold"
                        else f"artifacts/pdes_perf_{args.workload}.json")
 
+    failed = []
     results = {}
-    for name, spec in build_ladder(args.workload):
+    ladder = (build_smoke_ladder if args.smoke else build_ladder)(args.workload)
+    for name, spec in ladder:
         print(f"[pdes_perf:{args.workload}] {name}...", flush=True)
         results[name] = run_child(D, args.workload, **spec)
         r = results[name]
         if "error" in r:
             print(f"  ERROR {r['error']}")
+            failed.append(name)
         else:
             clean = (r["stats"]["late_events"] == 0
-                     and r["stats"]["cal_overflow"] == 0)
+                     and r["stats"]["cal_overflow"] == 0
+                     and r["stats"]["oob_events"] == 0)
             print(f"  {r['ev_s']:,.0f} ev/s  "
                   f"exchange {r['exchange_bytes_per_epoch']/1e6:.2f} MB/epoch "
-                  f"stolen={r['stats']['stolen']} clean={clean}")
+                  f"stolen={r['stats']['stolen']} "
+                  f"rebalances={r['stats']['rebalances']} clean={clean}")
+            if not clean:
+                failed.append(name)
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"[pdes_perf] wrote {out}")
+    if args.smoke and failed:
+        raise SystemExit(f"[pdes_perf] smoke FAILED rungs: {failed}")
 
 
 if __name__ == "__main__":

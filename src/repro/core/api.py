@@ -71,6 +71,17 @@ class SimModel(abc.ABC):
         """The model's bootstrap events as flat numpy arrays
         {dst:i32[K], ts:f32[K], seed:u32[K], payload:f32[K]}."""
 
+    def object_weights(self) -> np.ndarray | None:
+        """Optional per-object expected-load hint, f64[n_objects].
+
+        Consumed by ``EngineConfig(placement="weighted")`` (and as the
+        starting point of ``"adaptive"``): the engine packs contiguous id
+        ranges balancing this weight — the paper's NUMA knapsack objective.
+        ``None`` (the default) means "no skew known"; the engine falls back
+        to the equal split.  Any positive scale works — only ratios matter.
+        """
+        return None
+
     @abc.abstractmethod
     def process_event(self, state_slice: Any, ts: jax.Array, seed: jax.Array,
                       payload: jax.Array) -> tuple[Any, EmittedEvents]:

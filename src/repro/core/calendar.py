@@ -148,6 +148,49 @@ def extract_sorted(cal: Calendar, epoch: jax.Array):
     return cal._replace(ts=new_ts, cnt=new_cnt), ts, seed, pay, cnt_b
 
 
+# ---------------------------------------------------------------------------
+# bulk row movement (adaptive-placement migration, paper §II-C)
+# ---------------------------------------------------------------------------
+
+def take_rows(cal: Calendar, idx: jax.Array) -> Calendar:
+    """Gather whole per-object calendar rows (all buckets, all slots).
+
+    Bucket indices are absolute-epoch modulo ``n_buckets`` — identical on
+    every device — so a row's bucket contents stay valid wherever the row
+    lands.  This is the bulk-extract half of object migration: the rebalance
+    stage ships rows wholesale instead of flattening events through the
+    bounded route path (no capacity to overflow, nothing to drop).
+    """
+    return Calendar(cal.ts[idx], cal.seed[idx], cal.payload[idx],
+                    cal.cnt[idx])
+
+
+def put_rows(cal: Calendar, idx: jax.Array, rows: Calendar,
+             mask: jax.Array) -> Calendar:
+    """Scatter whole calendar rows into local slots where ``mask`` holds.
+
+    The reinsert half of migration: receivers overwrite the slot wholesale
+    (the migrated row replaces whatever the slot held — callers guarantee the
+    slot was vacated).  Masked-off rows are dropped via an out-of-range index.
+    """
+    safe = jnp.where(mask, idx, cal.n_local)
+    put = lambda dstf, srcf: dstf.at[safe].set(srcf, mode="drop")
+    return Calendar(put(cal.ts, rows.ts), put(cal.seed, rows.seed),
+                    put(cal.payload, rows.payload), put(cal.cnt, rows.cnt))
+
+
+def clear_rows(cal: Calendar, dead: jax.Array) -> Calendar:
+    """Deaden rows where ``dead`` holds: zero counts, +inf timestamps.
+
+    Used after a rebalance shifts a device's range: slots no longer backing a
+    live object must never contribute events (extraction and the pending-
+    multiset readers both key off ``cnt``/``ts``).
+    """
+    cnt = jnp.where(dead[:, None], 0, cal.cnt)
+    ts = jnp.where(dead[:, None, None], jnp.inf, cal.ts)
+    return cal._replace(ts=ts, cnt=cnt)
+
+
 class Fallback(NamedTuple):
     """The per-thread TLS fallback list (paper §II-B) → per-device buffer.
 

@@ -16,12 +16,27 @@ processes exactly one epoch through the stage pipeline of
      (``Scheduler``): round r applies the r-th in-order event of every object
      in parallel (vmap), so each object's state stays register/VMEM-hot across
      its whole batch while objects are processed in parallel;
+  3b. **rebalance (optional)** — with ``placement="adaptive"``, every
+     ``rebalance_every`` epochs the placement boundaries are recomputed from
+     measured per-object load and moved objects (state + calendar rows)
+     migrate to their new owners (``RebalancePolicy``, paper §II-C);
   4. **route** — emitted events plus drained fallback entries are exchanged
      (``Router``: `allgather` mirrors the shared-memory "any thread enqueues
      anywhere" semantics; `a2a` is the optimized pairwise exchange);
   5. **deliver** — owners insert routed events into calendar buckets (conflict-
      free scatter) or park beyond-horizon events in the fallback buffer;
   6. **barrier** — implicit in the collectives; epoch advances everywhere.
+
+Object → device placement is contiguous-by-id (the paper's NUMA knapsack):
+``EngineConfig.placement`` selects ``equal`` ranges, ``weighted`` ranges
+balancing the model's :meth:`~repro.core.api.SimModel.object_weights` hint,
+or ``adaptive`` runtime rebalancing.  Because placements may be uneven while
+SPMD sharding must be even, every device materializes ``n_local_max`` object
+rows (the *pad*); rows beyond a device's live range are inert — zero calendar
+counts, never receiving events.  With the default equal placement on a
+divisible object count the pad is exact and the layout is identical to the
+classic one.  The live boundaries vector rides in ``EngineState`` so the
+rebalance stage can move it without retracing.
 
 Event flow is variable-arity end to end: each processed event emits
 0..``model.max_out`` successors (``EmittedEvents`` rows with ``valid`` masks
@@ -40,6 +55,7 @@ historical ``repro.core.engine`` imports keep working.
 """
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
@@ -52,7 +68,7 @@ from .calendar import make_calendar, make_fallback
 from .events import EventBatch
 from .pipeline import (AXIS, EngineConfig, EngineState, Stats, deliver,
                        make_step, zero_stats)
-from .placement import equal_placement
+from .placement import Placement, equal_placement, weighted_placement
 
 __all__ = ["AXIS", "EngineConfig", "EngineState", "ParsirEngine", "Stats",
            "make_step", "zero_stats"]
@@ -68,6 +84,25 @@ def _shard_map(f, mesh, in_specs, out_specs):
                   check_rep=False)
 
 
+def build_placement(model: SimModel, cfg: EngineConfig, D: int) -> Placement:
+    """Resolve ``cfg.placement`` into the engine's initial Placement.
+
+    ``weighted``/``adaptive`` consult the model's optional ``object_weights``
+    hint (falling back to the equal split when the model declares none);
+    ``adaptive`` additionally widens the per-device row pad by
+    ``placement_slack`` so the boundaries have static headroom to skew.
+    """
+    O = model.n_objects
+    if cfg.placement == "equal":
+        return equal_placement(O, D)
+    w = model.object_weights()
+    pl = equal_placement(O, D) if w is None else weighted_placement(w, D)
+    if cfg.placement == "adaptive":
+        pad = min(O, int(math.ceil(O / D * cfg.placement_slack)))
+        pl = pl.padded(max(pl.n_local_max, pad))
+    return pl
+
+
 class ParsirEngine:
     """Build, initialize and run a PARSIR simulation on a device mesh."""
 
@@ -77,10 +112,8 @@ class ParsirEngine:
             mesh = Mesh(np.array(jax.devices()[:1]), (AXIS,))
         self.model, self.cfg, self.mesh = model, cfg, mesh
         D = int(np.prod(mesh.devices.shape))
-        if model.n_objects % D:
-            raise ValueError(f"n_objects={model.n_objects} not divisible by "
-                             f"mesh size {D}")
-        self.placement = equal_placement(model.n_objects, D)
+        cfg.validate(D)
+        self.placement = build_placement(model, cfg, D)
         self.D = D
 
         self._step = make_step(model, cfg, self.placement)
@@ -93,26 +126,27 @@ class ParsirEngine:
         def ingest(state: EngineState, batch: EventBatch) -> EngineState:
             dev = jax.lax.axis_index(AXIS)
             cur = state.epoch[0]
-            cal, fb, cal_ovf, fb_ovf, late = deliver(
-                state.cal, state.fb, batch, cur, dev, self.placement, cfg,
-                init=True)
+            pl = self.placement.with_boundaries(state.bounds[0])
+            cal, fb, cal_ovf, fb_ovf, late, oob = deliver(
+                state.cal, state.fb, batch, cur, dev, pl, cfg, init=True)
             st = state.stats
             stats = st._replace(cal_overflow=st.cal_overflow + cal_ovf,
                                 fb_overflow=st.fb_overflow + fb_ovf,
-                                late_events=st.late_events + late)
-            return EngineState(cal, fb, state.obj, state.epoch, stats)
+                                late_events=st.late_events + late,
+                                oob_events=st.oob_events + oob)
+            return state._replace(cal=cal, fb=fb, stats=stats)
 
         self._ingest = jax.jit(_shard_map(ingest, mesh, (spec, P()), spec))
 
     # -- lifecycle -------------------------------------------------------------
 
     def init(self) -> EngineState:
-        O, D = self.model.n_objects, self.D
+        D, M = self.D, self.placement.n_local_max
         cfg = self.cfg
-        obj_np = self.model.init_object_state(np.arange(O))
+        obj_np = self.model.init_object_state(self.placement.padded_gids())
         obj = jax.tree.map(
             lambda l: jax.device_put(l, self._sharding), obj_np)
-        cal = make_calendar(O, cfg.n_buckets, cfg.bucket_cap)
+        cal = make_calendar(D * M, cfg.n_buckets, cfg.bucket_cap)
         cal = jax.tree.map(lambda l: jax.device_put(l, self._sharding), cal,
                            is_leaf=lambda x: isinstance(x, jax.Array))
         fb = make_fallback(D * cfg.fallback_cap)
@@ -122,7 +156,10 @@ class ParsirEngine:
         stats = jax.tree.map(
             lambda l: jax.device_put(jnp.tile(l, D), self._sharding),
             zero_stats())
-        state = EngineState(cal, fb, obj, epoch, stats)
+        b = jnp.asarray(np.asarray(self.placement.boundaries, np.int32))
+        bounds = jax.device_put(jnp.tile(b[None, :], (D, 1)), self._sharding)
+        load = jax.device_put(jnp.zeros((D * M,), jnp.int32), self._sharding)
+        state = EngineState(cal, fb, obj, epoch, stats, bounds, load)
 
         init_ev = self.model.initial_events()
         batch = EventBatch(
@@ -159,3 +196,30 @@ class ParsirEngine:
         cal = int(np.sum(np.asarray(state.cal.cnt)))
         fb = int(np.sum(np.asarray(state.fb.events.valid)))
         return cal + fb
+
+    def boundaries_of(self, state: EngineState) -> np.ndarray:
+        """The live placement boundaries, i64[D+1] (they move under
+        ``placement='adaptive'``; rows of ``state.bounds`` are identical)."""
+        return np.asarray(state.bounds)[0].astype(np.int64)
+
+    def global_row_of(self, state: EngineState) -> tuple[np.ndarray, np.ndarray]:
+        """(gid, live) per padded row, each [D * n_local_max].
+
+        ``gid[r]`` is the global object id row ``r`` backs; ``live[r]`` is
+        False for pad rows (which never hold events or meaningful state).
+        """
+        b = self.boundaries_of(state)
+        M = self.placement.n_local_max
+        d = np.arange(self.D * M) // M
+        i = np.arange(self.D * M) % M
+        gid = b[d] + i
+        live = i < (b[d + 1] - b[d])
+        return np.where(live, gid, 0), live
+
+    def global_object_state(self, state: EngineState) -> dict[str, np.ndarray]:
+        """Per-object state re-assembled in global id order, leading dim
+        ``n_objects`` — the padded per-device layout undone."""
+        gid, live = self.global_row_of(state)
+        order = np.nonzero(live)[0]  # contiguous ranges → already gid-sorted
+        assert np.array_equal(gid[order], np.arange(self.model.n_objects))
+        return {k: np.asarray(v)[order] for k, v in state.obj.items()}

@@ -12,6 +12,8 @@ classes instead of string-dispatched branches inside one monolithic module:
     kernel), ``ltf``;
   * :mod:`routers`     — ``allgather``, ``a2a``;
   * :mod:`steal`       — ``none``, ``loan``;
+  * :mod:`rebalance`   — ``none``, ``adaptive`` (epoch-boundary placement
+    rebalancing with object migration);
   * :mod:`deliver`     — owner-side calendar/fallback insertion;
   * :mod:`step`        — :func:`make_step`, the wiring.
 
@@ -26,21 +28,24 @@ Registering a new stage::
 
     EngineConfig(lookahead=0.5, scheduler="my-sched")
 """
-from . import routers, schedulers, steal  # noqa: F401  (registration imports)
-from .base import (AXIS, ROUTERS, SCHEDULERS, STEAL_POLICIES, EngineState,
-                   Router, Scheduler, Stats, StealPolicy, epoch_of,
+from . import rebalance, routers, schedulers, steal  # noqa: F401  (registration imports)
+from .base import (AXIS, REBALANCERS, ROUTERS, SCHEDULERS, STEAL_POLICIES,
+                   EngineState, RebalancePolicy, Router, Scheduler, Stats,
+                   StealPolicy, epoch_of, register_rebalancer,
                    register_router, register_scheduler, register_steal_policy,
-                   resolve_router, resolve_scheduler, resolve_steal,
-                   zero_stats)
+                   resolve_rebalance, resolve_router, resolve_scheduler,
+                   resolve_steal, zero_stats)
 from .config import EngineConfig
 from .deliver import deliver
 from .step import make_step
 
 __all__ = [
-    "AXIS", "ROUTERS", "SCHEDULERS", "STEAL_POLICIES",
+    "AXIS", "REBALANCERS", "ROUTERS", "SCHEDULERS", "STEAL_POLICIES",
     "EngineConfig", "EngineState", "Stats",
-    "Router", "Scheduler", "StealPolicy",
-    "register_router", "register_scheduler", "register_steal_policy",
-    "resolve_router", "resolve_scheduler", "resolve_steal",
+    "RebalancePolicy", "Router", "Scheduler", "StealPolicy",
+    "register_rebalancer", "register_router", "register_scheduler",
+    "register_steal_policy",
+    "resolve_rebalance", "resolve_router", "resolve_scheduler",
+    "resolve_steal",
     "epoch_of", "zero_stats", "deliver", "make_step",
 ]

@@ -49,11 +49,14 @@ class Stats(NamedTuple):
     late_events: jax.Array           # causality violations (must be 0)
     lookahead_violations: jax.Array  # model emitted ts < ts_in + L (must be 0)
     stolen: jax.Array                # loaned batches processed on this device
+    oob_events: jax.Array            # emitted dst outside [0, n_objects) (must be 0)
+    rebalances: jax.Array            # adaptive-placement rebalance firings
+    migrated: jax.Array              # object rows received via rebalance migration
 
 
 def zero_stats() -> Stats:
     z = jnp.zeros((1,), jnp.int32)
-    return Stats(z, z, z, z, z, z, z)
+    return Stats(z, z, z, z, z, z, z, z, z, z)
 
 
 class EngineState(NamedTuple):
@@ -62,6 +65,9 @@ class EngineState(NamedTuple):
     obj: Any
     epoch: jax.Array   # i32 [1] per device (identical everywhere)
     stats: Stats
+    bounds: jax.Array  # i32 [1, n_devices + 1] per device (identical everywhere)
+    load: jax.Array    # i32 [n_local_max] per-object processed counts since
+    #                    the last rebalance (measured placement weights)
 
 
 def epoch_of(ts: jax.Array, epoch_len: float) -> jax.Array:
@@ -142,6 +148,37 @@ class StealPolicy(abc.ABC):
         """
 
 
+class RebalancePolicy(abc.ABC):
+    """Placement-rebalancing strategy (epoch-boundary stage, paper §II-C).
+
+    Where :class:`StealPolicy` loans an object's *current-epoch batch* and
+    returns it (ownership never moves), a rebalance policy moves *ownership*:
+    it recomputes the contiguous placement boundaries from measured load and
+    migrates object state + calendar rows to the new owners.  It runs between
+    the process and route stages, so the epoch's freshly emitted events are
+    routed against the NEW boundaries, and fallback entries (which carry
+    global dst) re-route themselves through the existing routers on the next
+    epochs — no fallback migration is needed.
+    """
+
+    name: str
+
+    @abc.abstractmethod
+    def rebalance(self, cfg: "EngineConfig", placement: Placement,
+                  dev: jax.Array, cur: jax.Array, bounds: jax.Array,
+                  load: jax.Array, cal: Calendar, obj: Any
+                  ) -> tuple[jax.Array, jax.Array, Calendar, Any,
+                             jax.Array, jax.Array]:
+        """Maybe move the boundaries and migrate rows.
+
+        ``bounds`` is the live i32[n_devices+1] boundaries vector, ``load``
+        the per-local-row processed counts accumulated since the last firing
+        (this epoch included).  Returns (bounds, load, cal, obj,
+        n_rows_received, fired ∈ {0, 1}); non-firing epochs return everything
+        unchanged.
+        """
+
+
 # ---------------------------------------------------------------------------
 # registries
 # ---------------------------------------------------------------------------
@@ -149,6 +186,7 @@ class StealPolicy(abc.ABC):
 SCHEDULERS: dict[str, Scheduler] = {}
 ROUTERS: dict[str, Router] = {}
 STEAL_POLICIES: dict[str, StealPolicy] = {}
+REBALANCERS: dict[str, RebalancePolicy] = {}
 
 
 def _register(registry: dict, kind: str, name: str) -> Callable:
@@ -176,6 +214,11 @@ def register_steal_policy(name: str):
     return _register(STEAL_POLICIES, "steal policy", name)
 
 
+def register_rebalancer(name: str):
+    """Class decorator: register a :class:`RebalancePolicy` under ``name``."""
+    return _register(REBALANCERS, "rebalancer", name)
+
+
 def resolve_scheduler(cfg: "EngineConfig") -> Scheduler:
     """EngineConfig → Scheduler.
 
@@ -198,3 +241,9 @@ def resolve_steal(cfg: "EngineConfig", n_devices: int) -> StealPolicy:
     if cfg.steal and n_devices > 1:
         return STEAL_POLICIES["loan"]
     return STEAL_POLICIES["none"]
+
+
+def resolve_rebalance(cfg: "EngineConfig") -> RebalancePolicy:
+    if cfg.placement == "adaptive":
+        return REBALANCERS["adaptive"]
+    return REBALANCERS["none"]

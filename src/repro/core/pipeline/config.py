@@ -28,6 +28,13 @@ class EngineConfig:
     steal: bool = False
     steal_cap: int = 4               # loans a donor may publish per epoch
     claim_cap: int = 4               # loans a receiver may claim per epoch
+    placement: str = "equal"         # equal | weighted | adaptive (§II-A/C)
+    rebalance_every: int = 0         # adaptive: epochs between rebalances
+    migrate_cap: int = 16            # adaptive: max rows a device publishes
+    #                                  per rebalance (boundary shift <= cap/2)
+    placement_slack: float = 2.0     # adaptive: per-device row pad factor
+    #                                  over the equal split (headroom for the
+    #                                  boundaries to skew)
 
     def __post_init__(self):
         el = self.epoch_len if self.epoch_len is not None else self.lookahead
@@ -44,6 +51,28 @@ class EngineConfig:
         if self.batch_impl not in ("rounds", "model"):
             raise ValueError(f"unknown batch_impl {self.batch_impl!r} "
                              "(choose from ['rounds', 'model'])")
+        if self.placement not in ("equal", "weighted", "adaptive"):
+            raise ValueError(f"unknown placement {self.placement!r} "
+                             "(choose from ['equal', 'weighted', 'adaptive'])")
+        if self.placement == "adaptive":
+            if self.rebalance_every < 1:
+                raise ValueError(
+                    "placement='adaptive' needs rebalance_every >= 1 — with "
+                    f"{self.rebalance_every} the rebalance stage would "
+                    "silently never fire")
+            if self.migrate_cap < 2:
+                raise ValueError(
+                    f"migrate_cap must be >= 2 (one row each way per "
+                    f"rebalance), got {self.migrate_cap}")
+            if self.placement_slack < 1.0:
+                raise ValueError(
+                    f"placement_slack must be >= 1.0, got "
+                    f"{self.placement_slack}")
+        elif self.rebalance_every:
+            raise ValueError(
+                f"rebalance_every={self.rebalance_every} only applies to "
+                f"placement='adaptive' (got placement={self.placement!r}) — "
+                "it would silently do nothing")
 
         # stage-name validation against the registries (populated on package
         # import; imported lazily here so config stays cycle-free).

@@ -2,9 +2,19 @@
 
 Owners insert routed in-horizon events into calendar buckets (conflict-free
 scatter) and park beyond-horizon events in the fallback buffer.  Capacity
-overflow and late (already-closed-epoch) arrivals are counted, never silent.
-Delivery is the same code for the per-epoch step and the initial-event ingest
-(``init=True`` widens the window to include the current epoch).
+overflow, late (already-closed-epoch) arrivals and out-of-range destinations
+are counted, never silent.  Delivery is the same code for the per-epoch step
+and the initial-event ingest (``init=True`` widens the window to include the
+current epoch).
+
+Out-of-range ``dst`` (< 0 or >= n_objects) would otherwise be *silently
+mangled*: ``Placement.owner``'s searchsorted lands ``dst >= n_objects`` on
+the last device and the local-index clip would then insert the event into the
+wrong object's calendar.  Here such events are excluded from ``mine`` and
+counted once (on device 0 — the only deliver-side source of oob events is the
+replicated initial ingest; the step excludes oob at the producer before
+routing).  Drivers treat a nonzero ``stats.oob_events`` as a hard error, like
+overflow.
 """
 from __future__ import annotations
 
@@ -18,12 +28,18 @@ from .base import epoch_of
 
 def deliver(cal: Calendar, fb: Fallback, batch: EventBatch, cur, dev,
             placement: Placement, cfg, init: bool):
-    """Insert my in-horizon events; park my beyond-horizon events in fallback."""
+    """Insert my in-horizon events; park my beyond-horizon events in fallback.
+
+    Returns (cal, fb, n_cal_overflow, n_fb_overflow, n_late, n_oob).
+    """
     N = cfg.n_buckets
     epochs = epoch_of(batch.ts, cfg.epoch_len)
     boundaries = jnp.asarray(placement.boundaries, jnp.int32)
+    oob = batch.valid & ((batch.dst < 0)
+                         | (batch.dst >= placement.n_objects))
+    n_oob = jnp.where(dev == 0, jnp.sum(oob.astype(jnp.int32)), 0)
     owner = placement.owner(batch.dst)
-    mine = batch.valid & (owner == dev)
+    mine = batch.valid & ~oob & (owner == dev)
     lo = jnp.int32(0) if init else cur + 1
     hi = cur + (N - 1 if init else N)
     insertable = mine & (epochs >= lo) & (epochs <= hi)
@@ -35,4 +51,4 @@ def deliver(cal: Calendar, fb: Fallback, batch: EventBatch, cur, dev,
                           batch.payload, insertable)
     fb, fb_ovf = fallback_put(fb, EventBatch(batch.dst, batch.ts, batch.seed,
                                              batch.payload, beyond))
-    return cal, fb, cal_ovf, fb_ovf, late
+    return cal, fb, cal_ovf, fb_ovf, late, n_oob

@@ -1,0 +1,168 @@
+"""RebalancePolicy stage implementations (paper §II-A / §II-C).
+
+``none``     — the boundaries set at engine construction are final.
+``adaptive`` — every ``rebalance_every`` epochs, recompute the contiguous
+               placement boundaries from *measured* per-object processed
+               counts (the knapsack objective of ``weighted_placement``, fed
+               by runtime load instead of a static hint) and migrate moved
+               objects — state row + whole calendar rows — to their new
+               owners.
+
+Mechanics, all static-shape and counted-never-silent:
+
+  * the per-device ``load`` vector (accumulated batch sizes since the last
+    firing) is all-gathered and scattered into a global per-object load
+    array — the SPMD stand-in for the paper's per-NUMA-node counters;
+  * new boundaries are the equal-mass quantile cuts of that load's prefix
+    sum, computed *replicated* (every device derives the identical vector
+    from the identical gathered inputs — no coordinator);
+  * each boundary's shift is clamped to ``migrate_cap // 2`` and each
+    device's range to ``n_local_max`` rows, so the set of rows leaving any
+    device is bounded by ``migrate_cap`` *by construction* — migration can
+    never overflow, so nothing needs dropping;
+  * leaving rows (a prefix and/or suffix of the device's contiguous range)
+    are published — object state plus whole calendar rows
+    (:func:`repro.core.calendar.take_rows`) — through an ``all_gather``,
+    mirroring the loan path's exchange; staying rows shift local slots by
+    a gather-roll; receivers scatter claimed rows into their new slots
+    (:func:`~repro.core.calendar.put_rows`) and vacated slots are deadened
+    (:func:`~repro.core.calendar.clear_rows`).
+
+Calendar buckets are ring-indexed by absolute epoch (``epoch % n_buckets``),
+identical on every device, so migrated rows' bucket contents stay valid as-is.
+Fallback entries carry *global* destinations and are re-offered through the
+normal routers every epoch, so they re-home themselves after the boundary
+move — the routers are the migration path for everything not yet delivered.
+
+The stage fires between process and route, so the epoch's fresh emissions are
+routed against the new boundaries immediately.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..calendar import Calendar, clear_rows, put_rows, take_rows
+from .base import AXIS, RebalancePolicy, register_rebalancer
+
+
+@register_rebalancer("none")
+class NoRebalance(RebalancePolicy):
+    """Static placement: boundaries never move."""
+
+    def rebalance(self, cfg, placement, dev, cur, bounds, load, cal, obj):
+        return bounds, load, cal, obj, jnp.int32(0), jnp.int32(0)
+
+
+def _quantile_boundaries(obj_load, bounds, D, M, O, shift_cap):
+    """Replicated new-boundaries computation: equal-mass cuts, clamped.
+
+    Clamps keep every boundary within ``shift_cap`` of its old position and
+    every device's range within the static row pad ``M`` while staying
+    feasible (the remaining devices can always hold the remaining objects) —
+    provable by induction from the old boundaries' own feasibility.
+    """
+    w = obj_load.astype(jnp.float32)
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(w)])
+    total = cum[-1]
+    targets = total * jnp.arange(1, D, dtype=jnp.float32) / D
+    cuts = jnp.searchsorted(cum, targets, side="left").astype(jnp.int32)
+    desired = jnp.concatenate([jnp.zeros((1,), jnp.int32), cuts,
+                               jnp.full((1,), O, jnp.int32)])
+    nb = [jnp.int32(0)]
+    for d in range(1, D):
+        lo = jnp.maximum(jnp.maximum(nb[d - 1], bounds[d] - shift_cap),
+                         jnp.int32(O - (D - d) * M))
+        hi = jnp.minimum(jnp.minimum(nb[d - 1] + M, bounds[d] + shift_cap),
+                         jnp.int32(d * M))
+        nb.append(jnp.clip(desired[d], lo, hi))
+    nb.append(jnp.int32(O))
+    new_b = jnp.stack(nb)
+    # an idle window (no events processed anywhere) carries no signal.
+    return jnp.where(total > 0, new_b, bounds)
+
+
+@register_rebalancer("adaptive")
+class AdaptiveRebalance(RebalancePolicy):
+    """Epoch-boundary boundary recomputation + object migration."""
+
+    def rebalance(self, cfg, placement, dev, cur, bounds, load, cal, obj):
+        D = placement.n_devices
+        M = placement.n_local_max
+        O = placement.n_objects
+        R = cfg.rebalance_every
+        shift_cap = jnp.int32(cfg.migrate_cap // 2)
+        K = 2 * (cfg.migrate_cap // 2)      # max rows leaving one device
+
+        fire = (cur + 1) % R == 0
+
+        def skip(args):
+            bounds, load, cal, obj = args
+            return bounds, load, cal, obj, jnp.int32(0), jnp.int32(0)
+
+        def do(args):
+            bounds, load, cal, obj = args
+            starts, cnts = bounds[:-1], bounds[1:] - bounds[:-1]
+
+            # -- measured global per-object load (replicated) ----------------
+            all_load = jax.lax.all_gather(load, AXIS)          # [D, M]
+            d_idx = jnp.arange(D * M, dtype=jnp.int32) // M
+            i_idx = jnp.arange(D * M, dtype=jnp.int32) % M
+            gid_all = starts[d_idx] + i_idx
+            row_live = i_idx < cnts[d_idx]
+            obj_load = jnp.zeros((O,), jnp.int32).at[
+                jnp.where(row_live, gid_all, O)].add(
+                    all_load.reshape(-1), mode="drop")
+
+            new_b = _quantile_boundaries(obj_load, bounds, D, M, O, shift_cap)
+
+            # -- publish leaving rows (prefix + suffix of my old range) ------
+            old_start, old_end = bounds[dev], bounds[dev + 1]
+            new_start, new_end = new_b[dev], new_b[dev + 1]
+            old_cnt = old_end - old_start
+            a = jnp.clip(new_start - old_start, 0, old_cnt)    # leave front
+            c = jnp.clip(old_end - new_end, 0, old_cnt - a)    # leave back
+            k = jnp.arange(K, dtype=jnp.int32)
+            pub_slot = jnp.where(k < a, k, old_cnt - c + (k - a))
+            pub_valid = k < a + c
+            pub_slot = jnp.clip(pub_slot, 0, M - 1)
+            pub = {
+                "obj": jax.tree.map(lambda l: l[pub_slot], obj),
+                "cal": take_rows(cal, pub_slot),
+                "gid": jnp.where(pub_valid, old_start + pub_slot, O),
+            }
+            pub_g = jax.tree.map(lambda x: jax.lax.all_gather(x, AXIS), pub)
+
+            # -- staying rows shift local slots by the boundary delta --------
+            shift = new_start - old_start
+            src = (jnp.arange(M, dtype=jnp.int32) + shift) % M
+            obj2 = jax.tree.map(lambda l: l[src], obj)
+            cal2 = take_rows(cal, src)
+            gid_new = new_start + jnp.arange(M, dtype=jnp.int32)
+            new_cnt = new_end - new_start
+            stay = ((jnp.arange(M, dtype=jnp.int32) < new_cnt)
+                    & (gid_new >= old_start) & (gid_new < old_end))
+
+            # -- claim migrated rows now inside my new range -----------------
+            flat = lambda l: l.reshape((D * K,) + l.shape[2:])
+            rgid = flat(pub_g["gid"])
+            rown = jnp.searchsorted(new_b, rgid, side="right"
+                                    ).astype(jnp.int32) - 1
+            rmine = (rgid < O) & (rown == dev)
+            rslot = jnp.clip(rgid - new_start, 0, M - 1)
+            obj3 = jax.tree.map(
+                lambda l, r: l.at[jnp.where(rmine, rslot, M)].set(
+                    r, mode="drop"),
+                obj2, jax.tree.map(flat, pub_g["obj"]))
+            cal3 = put_rows(cal2, rslot, jax.tree.map(flat, pub_g["cal"]),
+                            rmine)
+
+            received = jnp.zeros((M,), bool).at[
+                jnp.where(rmine, rslot, M)].set(True, mode="drop")
+            cal4 = clear_rows(cal3, ~(stay | received))
+
+            n_recv = jnp.sum(rmine.astype(jnp.int32))
+            return (new_b, jnp.zeros_like(load), cal4, obj3, n_recv,
+                    jnp.int32(1))
+
+        return jax.lax.cond(fire, do, skip, (bounds, load, cal, obj))

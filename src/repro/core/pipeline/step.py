@@ -1,11 +1,23 @@
 """The per-device epoch step: pure wiring of the pipeline stages.
 
-    extract → steal → process → route → deliver  (+ stats accumulation)
+    extract → steal → process → rebalance → route → deliver  (+ stats)
 
 Stage behavior lives behind the :mod:`repro.core.pipeline.base` interfaces;
-:func:`make_step` resolves the configured Scheduler / Router / StealPolicy
-once, runs their fail-fast validation, and returns the jittable step closure
-the engine shard_maps over the mesh.
+:func:`make_step` resolves the configured Scheduler / Router / StealPolicy /
+RebalancePolicy once, runs their fail-fast validation, and returns the
+jittable step closure the engine shard_maps over the mesh.
+
+Placement boundaries are *state*, not trace constants: every step rebuilds a
+runtime :class:`~repro.core.placement.Placement` from ``state.bounds`` so the
+adaptive rebalance stage can move the cuts at epoch boundaries.  The
+rebalance runs between process and route — the epoch's fresh emissions (and
+every fallback re-offer) are routed against the new boundaries immediately.
+
+Out-of-range destinations (``dst`` outside ``[0, n_objects)``) are triaged at
+the producer: counted in ``stats.oob_events`` (a hard error at the driver,
+like overflow) and excluded from routing/fallback, where the owner
+searchsorted + local-index clip would otherwise deliver them into the wrong
+object's calendar.
 """
 from __future__ import annotations
 
@@ -18,9 +30,9 @@ from ..api import SimModel
 from ..calendar import Fallback, extract_sorted
 from ..events import compact_mask, concat_batches, truncate
 from ..placement import Placement
-from . import routers, schedulers, steal  # noqa: F401  (registration imports)
-from .base import (AXIS, EngineState, Stats, epoch_of, resolve_router,
-                   resolve_scheduler, resolve_steal)
+from . import rebalance, routers, schedulers, steal  # noqa: F401  (registration imports)
+from .base import (AXIS, EngineState, Stats, epoch_of, resolve_rebalance,
+                   resolve_router, resolve_scheduler, resolve_steal)
 from .config import EngineConfig
 from .deliver import deliver
 
@@ -29,16 +41,20 @@ def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
               ) -> Callable[[EngineState], EngineState]:
     D = placement.n_devices
     N = cfg.n_buckets
+    O = placement.n_objects
 
     scheduler = resolve_scheduler(cfg)
     router = resolve_router(cfg.route)
     policy = resolve_steal(cfg, D)
+    rebalancer = resolve_rebalance(cfg)
+    adaptive = cfg.placement == "adaptive"
     scheduler.validate(model, cfg)
     router.validate(cfg, placement)
 
     def step(state: EngineState) -> EngineState:
         dev = jax.lax.axis_index(AXIS)
         cur = state.epoch[0]
+        pl = placement.with_boundaries(state.bounds[0])
 
         # 1. extract — drain the calendar bucket of the current epoch.
         cal, ts_s, seed_s, pay_s, cnt_b = extract_sorted(state.cal, cur)
@@ -46,30 +62,44 @@ def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
         # 2.+3. steal + process — the policy runs the scheduler (possibly on
         # loan-augmented batches) and reports emitted events + counts.
         obj, out_flat, lv, stolen, proc_count = policy.process(
-            model, scheduler, cfg, placement, dev, state.obj,
+            model, scheduler, cfg, pl, dev, state.obj,
             ts_s, seed_s, pay_s, cnt_b)
+
+        # 3b. rebalance — adaptive placement moves the boundaries and
+        # migrates object rows at epoch boundaries; everything downstream
+        # (routing, delivery) sees the new cuts.
+        if adaptive:
+            load = state.load + cnt_b
+            bounds, load, cal, obj, migrated, fired = rebalancer.rebalance(
+                cfg, placement, dev, cur, state.bounds[0], load, cal, obj)
+            pl = placement.with_boundaries(bounds)
+        else:
+            bounds, load = state.bounds[0], state.load
+            migrated = fired = jnp.int32(0)
 
         # 4. route — producer-side triage (fresh events + fallback entries),
         # selection against the route capacity, then the exchange collective.
         prod = concat_batches(out_flat, state.fb.events)
         epochs = epoch_of(prod.ts, cfg.epoch_len)
-        eligible = prod.valid & (epochs >= cur + 1) & (epochs <= cur + N)
-        late_prod = prod.valid & (epochs <= cur)
+        oob = prod.valid & ((prod.dst < 0) | (prod.dst >= O))
+        n_oob = jnp.sum(oob.astype(jnp.int32))
+        eligible = prod.valid & ~oob & (epochs >= cur + 1) & (epochs <= cur + N)
+        late_prod = prod.valid & ~oob & (epochs <= cur)
         n_late_prod = jnp.sum(late_prod.astype(jnp.int32))
 
         route_buf, send, route_ovf = router.select_send(prod, eligible,
-                                                        placement, cfg)
+                                                        pl, cfg)
 
-        keep = prod.valid & ~send & ~late_prod
+        keep = prod.valid & ~send & ~late_prod & ~oob
         kept = compact_mask(prod, keep)
         fb = Fallback(truncate(kept, cfg.fallback_cap))
         fb_ovf = jnp.sum(kept.valid[cfg.fallback_cap:].astype(jnp.int32))
 
-        routed = router.exchange(route_buf, placement, cfg)
+        routed = router.exchange(route_buf, pl, cfg)
 
         # 5. deliver — owners insert into calendar buckets / fallback.
-        cal, fb, cal_ovf, fb_ovf2, late2 = deliver(
-            cal, fb, routed, cur, dev, placement, cfg, init=False)
+        cal, fb, cal_ovf, fb_ovf2, late2, oob2 = deliver(
+            cal, fb, routed, cur, dev, pl, cfg, init=False)
 
         st = state.stats
         stats = Stats(
@@ -80,7 +110,11 @@ def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
             late_events=st.late_events + n_late_prod + late2,
             lookahead_violations=st.lookahead_violations + lv,
             stolen=st.stolen + stolen,
+            oob_events=st.oob_events + n_oob + oob2,
+            rebalances=st.rebalances + fired,
+            migrated=st.migrated + migrated,
         )
-        return EngineState(cal, fb, obj, state.epoch + 1, stats)
+        return EngineState(cal, fb, obj, state.epoch + 1, stats,
+                           bounds[None, :], load)
 
     return step

@@ -6,6 +6,22 @@ id ranges per mesh device, expressed as a boundaries vector, with a weighted
 variant that balances expected event rates (the knapsack objective).  The
 owner lookup used by event routing is a ``searchsorted`` over the boundaries —
 the SPMD analogue of the paper's range check against min/max.
+
+Boundaries are allowed to be *dynamic*: the engine stores the live boundaries
+vector in ``EngineState`` and rebuilds a traced :class:`Placement` each step
+via :meth:`Placement.with_boundaries`, which is what lets the adaptive
+rebalance stage (:mod:`repro.core.pipeline.rebalance`) move the cuts at epoch
+boundaries without retracing.  The static fields (``n_objects``,
+``n_devices``, ``n_local_max``) never change after engine construction —
+``n_local_max`` is the per-device row *pad*: every device materializes exactly
+that many object rows, with rows beyond its live count inert (zero calendar
+counts, never receiving events).
+
+``owner`` itself gives garbage for out-of-range ids (-1 below, the last
+device at/above the top edge) — callers must mask ``dst`` against
+``[0, n_objects)`` first.  The engine counts such events in
+``stats.oob_events`` and drops them at the producer, never silently
+delivering them onto an edge device's wrong local slot.
 """
 from __future__ import annotations
 
@@ -16,10 +32,12 @@ import numpy as np
 
 
 class Placement(NamedTuple):
-    """Static contiguous placement of n_objects over n_devices.
+    """Contiguous placement of n_objects over n_devices.
 
     boundaries: i32[n_devices + 1]; device d owns [boundaries[d], boundaries[d+1]).
-    n_local_max: max objects on any device (static pad for per-device arrays).
+                May be a numpy array (static placement) or a traced jax array
+                (runtime placement inside the engine step).
+    n_local_max: row pad — objects materialized per device (static).
     """
 
     boundaries: np.ndarray
@@ -44,6 +62,31 @@ class Placement(NamedTuple):
     def counts(self) -> np.ndarray:
         return np.diff(self.boundaries).astype(np.int32)
 
+    def with_boundaries(self, boundaries) -> "Placement":
+        """Same static shape info, live (possibly traced) boundaries."""
+        return self._replace(boundaries=boundaries)
+
+    def padded(self, n_local_max: int) -> "Placement":
+        """Widen the per-device row pad (adaptive placement headroom)."""
+        if n_local_max < self.n_local_max:
+            raise ValueError(f"pad {n_local_max} < required {self.n_local_max}")
+        return self._replace(n_local_max=n_local_max)
+
+    def padded_gids(self) -> np.ndarray:
+        """Global object id of every padded row, [n_devices * n_local_max].
+
+        Rows beyond a device's live count repeat its last owned id (or 0 for
+        an empty device) so padding state is always valid model state.
+        """
+        out = []
+        for d in range(self.n_devices):
+            lo, hi = self.range_of(d)
+            g = np.arange(lo, hi, dtype=np.int64)
+            fill = g[-1] if g.size else 0
+            out.append(np.concatenate(
+                [g, np.full(self.n_local_max - g.size, fill, np.int64)]))
+        return np.concatenate(out)
+
 
 def equal_placement(n_objects: int, n_devices: int) -> Placement:
     """Uniform knapsack: near-equal contiguous ranges."""
@@ -55,15 +98,24 @@ def equal_placement(n_objects: int, n_devices: int) -> Placement:
 def weighted_placement(weights: Sequence[float], n_devices: int) -> Placement:
     """Knapsack by expected per-object load: split the prefix-sum of weights at
     equal-mass quantiles, keeping ranges contiguous (the paper's packing is also
-    contiguous-by-id)."""
+    contiguous-by-id).
+
+    Degenerate weights (non-finite, negative, or summing to ~zero — where the
+    quantile targets collapse and every cut lands on an edge) fall back to the
+    equal split instead of piling all objects onto one device.  The returned
+    ``n_local_max`` is the true maximum range size, not papered over.
+    """
     w = np.asarray(weights, dtype=np.float64)
     n_objects = w.shape[0]
+    total = float(np.sum(w))
+    if (not np.isfinite(total) or np.any(~np.isfinite(w)) or np.any(w < 0)
+            or total <= 1e-12 * max(1, n_objects)):
+        return equal_placement(n_objects, n_devices)
     cum = np.concatenate([[0.0], np.cumsum(w)])
-    total = cum[-1]
     targets = total * np.arange(1, n_devices) / n_devices
     cuts = np.searchsorted(cum, targets, side="left")
     boundaries = np.concatenate([[0], cuts, [n_objects]]).astype(np.int64)
-    # ensure monotone non-decreasing (degenerate weights)
+    # ensure monotone non-decreasing (repeated cuts on zero-weight runs)
     boundaries = np.maximum.accumulate(boundaries)
     n_local_max = int(np.max(np.diff(boundaries)))
-    return Placement(boundaries, n_objects, n_devices, max(n_local_max, 1))
+    return Placement(boundaries, n_objects, n_devices, n_local_max)

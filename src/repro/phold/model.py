@@ -91,6 +91,22 @@ class Phold(SimModel):
             "top": jnp.full((n,), S, jnp.int32),
         }
 
+    def object_weights(self) -> np.ndarray | None:
+        """Expected steady-state event share per object (placement hint).
+
+        With non-uniform routing, every emission lands on one of the first
+        ``hot_objects`` ids with probability ``hot_prob/256`` — so in steady
+        state that mass concentrates there regardless of where events start.
+        Uniform routing carries no skew: return None (equal split).
+        """
+        p = self.params
+        if not (p.hot_objects and p.hot_prob):
+            return None
+        h = p.hot_prob / 256.0
+        w = np.full(p.n_objects, (1.0 - h) / p.n_objects, np.float64)
+        w[:p.hot_objects] += h / p.hot_objects
+        return w
+
     def initial_events(self) -> dict[str, np.ndarray]:
         p = self.params
         o = np.repeat(np.arange(p.n_objects, dtype=np.uint32), p.initial_events)

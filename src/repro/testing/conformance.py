@@ -17,7 +17,10 @@ parts:
 
 ``SWEEP`` names the engine-config axes of the zoo: scheduler (batch | ltf),
 routing (allgather | a2a), stealing on/off, per-object batch implementation
-(vmap rounds | Pallas model kernel), and fractional epoch length.  The
+(vmap rounds | Pallas model kernel), fractional epoch length, and placement
+(equal | weighted | adaptive — the oracle knows nothing of devices, so every
+packing, including runtime rebalancing with object migration, must reach the
+identical drained state).  The
 checks are emission-arity-agnostic: workloads with fan-out (``max_out > 1``)
 and absorption (events that emit nothing — the pending multiset *shrinks*)
 run through the identical assertions, since the generalized oracle
@@ -54,20 +57,34 @@ SWEEP: dict[str, dict] = {
     "steal-a2a": dict(route="a2a", steal=True, steal_cap=2, claim_cap=4),
     "epoch-fraction": dict(epoch_len_frac=0.5),
     "batch-model": dict(batch_impl="model"),
+    # placement axis: the same drained state must fall out of every packing
+    # of objects onto devices (weighted knapsack, runtime rebalancing, and
+    # rebalancing composed with loans) — the oracle knows nothing of devices.
+    "weighted": dict(placement="weighted"),
+    "adaptive": dict(placement="adaptive", rebalance_every=8, migrate_cap=8),
+    "adaptive-a2a": dict(route="a2a", placement="adaptive",
+                         rebalance_every=8, migrate_cap=8),
+    "steal-adaptive": dict(route="a2a", placement="adaptive",
+                           rebalance_every=8, migrate_cap=8,
+                           steal=True, steal_cap=2, claim_cap=4),
 }
 
 
 def engine_pending(eng: ParsirEngine, state) -> np.ndarray:
     """(dst, seed) multiset of events in flight (calendar + fallback), sorted.
 
-    Calendar leading dims concatenate per-device local objects; with the
-    engine's contiguous equal placement the leading index *is* the global id.
+    Calendar leading dims concatenate per-device padded rows; the engine maps
+    each row to its backing global id (pad rows hold no events by invariant —
+    asserted here, since a counted event on a dead row would otherwise be
+    silently re-labeled).
     """
-    cnt = np.asarray(state.cal.cnt)                  # [O, N]
-    seed = np.asarray(state.cal.seed)                # [O, N, C]
-    O, N, C = seed.shape
+    cnt = np.asarray(state.cal.cnt)                  # [D*M, N]
+    seed = np.asarray(state.cal.seed)                # [D*M, N, C]
+    R, N, C = seed.shape
+    gid, live_row = eng.global_row_of(state)
+    assert not np.any(cnt[~live_row]), "events parked on a pad row"
     live = np.arange(C)[None, None, :] < cnt[:, :, None]
-    obj = np.broadcast_to(np.arange(O)[:, None, None], live.shape)
+    obj = np.broadcast_to(gid[:, None, None], live.shape)
     dsts = [obj[live].astype(np.uint64)]
     seeds = [seed[live].astype(np.uint64)]
 
@@ -110,8 +127,13 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
     tot = eng.totals(st)
 
     for counter in ("cal_overflow", "fb_overflow", "route_overflow",
-                    "late_events", "lookahead_violations"):
+                    "late_events", "lookahead_violations", "oob_events"):
         assert tot[counter] == 0, f"{counter}={tot[counter]} (must be 0): {tot}"
+    if cfg.placement == "adaptive":
+        # per-device counters: every device reports each firing, so the sum
+        # is (firings × D) — nonzero iff the stage actually ran.
+        assert tot["rebalances"] > 0, \
+            f"adaptive placement never rebalanced: {tot}"
 
     if ref is None:
         ref = run_sequential(model, n_epochs, cfg.epoch_len)
@@ -127,7 +149,7 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
 
     if dyadic:
         want = stack_oracle_state(ref.obj_state)
-        obj = {k: np.asarray(v) for k, v in st.obj.items()}
+        obj = eng.global_object_state(st)
         assert set(want) == set(obj), (set(want), set(obj))
         for k in want:
             np.testing.assert_array_equal(obj[k], want[k],
@@ -180,6 +202,9 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--expect-stolen", action="store_true",
                     help="assert stats.stolen > 0 summed over steal configs")
+    ap.add_argument("--expect-rebalances", type=int, default=0, metavar="N",
+                    help="assert every adaptive config fired the rebalance "
+                         "stage at least N times")
     args = ap.parse_args(argv)
 
     import jax
@@ -210,9 +235,17 @@ def main(argv=None) -> int:
         tot = report["totals"]
         if SWEEP[config].get("steal"):
             stolen += tot["stolen"]
+        if SWEEP[config].get("placement") == "adaptive" \
+                and args.expect_rebalances:
+            # `rebalances` sums the per-device counters: firings × D.
+            fired = tot["rebalances"] // args.devices
+            assert fired >= args.expect_rebalances, \
+                (f"{config}: rebalance fired {fired} < "
+                 f"{args.expect_rebalances} times")
         print(f"OK {args.workload} {config} D={args.devices} "
               f"processed={tot['processed']} pending={report['pending']} "
-              f"stolen={tot['stolen']}")
+              f"stolen={tot['stolen']} rebalances={tot['rebalances']} "
+              f"migrated={tot['migrated']}")
     if args.expect_stolen:
         assert stolen > 0, "stealing never engaged across steal configs"
     print("CONFORMANCE PASS")

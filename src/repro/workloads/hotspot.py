@@ -37,6 +37,18 @@ class HotspotParams(PholdParams):
 
 class HotspotPhold(Phold):
 
+    def object_weights(self) -> np.ndarray | None:
+        """Routing-skew weights (inherited) plus the population boost: hot
+        objects also *start* with ``(1 + hot_boost)×`` the baseline events,
+        which dominates early epochs before the routing skew equilibrates."""
+        p = self.params
+        w = super().object_weights()
+        if w is None:
+            w = np.full(p.n_objects, 1.0 / p.n_objects, np.float64)
+        boost = np.ones(p.n_objects, np.float64)
+        boost[:p.hot_objects] += p.hot_boost
+        return w * boost
+
     def initial_events(self) -> dict[str, np.ndarray]:
         p = self.params
         counts = np.full(p.n_objects, p.initial_events, np.int64)

@@ -1,0 +1,66 @@
+"""Benchmark-driver smoke: `pdes_perf --smoke` must run every ladder rung.
+
+Benchmark drivers rot silently — they run in subprocesses, swallow stderr
+into a result dict, and nothing in the test suite imports them.  The smoke
+mode (also a CI job) runs the full ladder at tiny scale and exits nonzero on
+any rung error or unclean counters; here we pin that *and* the child's
+fail-fast contract for unknown model parameters (which used to be the
+mechanism by which `hot_o`/`hot_p` silently no-opted on phold-hotspot).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_pdes_perf_smoke_ladder_runs(tmp_path):
+    out = tmp_path / "smoke.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.pdes_perf", "--workload",
+         "phold-hotspot", "--devices", "1", "--smoke", "--out", str(out)],
+        cwd=REPO, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    results = json.loads(out.read_text())
+    # the placement rungs exist and ran clean; adaptive actually rebalanced.
+    for rung in ("steal_off", "placement_weighted", "placement_adaptive"):
+        assert "error" not in results[rung], results[rung]
+        assert results[rung]["stats"]["oob_events"] == 0
+    assert results["placement_adaptive"]["stats"]["rebalances"] > 0
+
+
+def test_pdes_perf_child_rejects_unknown_model_kw():
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks import pdes_perf
+    finally:
+        sys.path.pop(0)
+    r = pdes_perf.run_child(1, "phold-hotspot", o=16, m=2, s=64, la=0.5,
+                            dist="dyadic", route="allgather", route_cap=64,
+                            epochs=1, warm=0,
+                            model_kw={"hot_objcts": 4})  # typo'd key
+    assert "error" in r
+    assert "hot_objcts" in r["error"] or "model_kw" in r["error"]
+
+
+@pytest.mark.slow
+def test_pdes_perf_forwards_hot_params_to_hotspot():
+    # regression: hot_o/hot_p ladder overrides used to be forwarded only for
+    # wname == "phold", so the hotspot ladder ran with defaults.  Behavioral
+    # probe: hot_o beyond n_objects makes ~3/4 of hot emissions out-of-range,
+    # so a nonzero oob_events counter proves the override reached the model
+    # (with the silently-dropped defaults it stays exactly 0).
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks import pdes_perf
+    finally:
+        sys.path.pop(0)
+    r = pdes_perf.run_child(1, "phold-hotspot", o=16, m=4, s=64, la=0.5,
+                            dist="dyadic", route="allgather", route_cap=256,
+                            epochs=3, warm=0, hot_o=64, hot_p=256)
+    assert "error" not in r, r
+    assert r["stats"]["oob_events"] > 0, r["stats"]

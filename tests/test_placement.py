@@ -1,0 +1,198 @@
+"""Placement unit + negative-path coverage (always-running, no hypothesis):
+
+* ``weighted_placement`` degenerate weights — all-zero / near-zero / negative
+  / non-finite mass falls back to the equal split (never piling every object
+  onto one edge device) and the returned pad is the true maximum range;
+* out-of-range destinations are *counted* (``stats.oob_events``, a hard
+  error at the driver like overflow), never silently clamped into another
+  object's calendar by the owner searchsorted + local-index clip;
+* the adaptive rebalancer's replicated boundary computation keeps every
+  feasibility invariant (monotone, range <= pad, shift <= cap) under
+  arbitrary measured loads;
+* the padded per-device layout: a non-divisible object count over 4 devices
+  still reproduces the oracle bit-exactly (subprocess, like every multi-
+  device test).
+"""
+import os
+import subprocess
+import sys
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import EmittedEvents, SimModel
+from repro.core.engine import EngineConfig, ParsirEngine
+from repro.core.pipeline.rebalance import _quantile_boundaries
+from repro.core.placement import equal_placement, weighted_placement
+
+
+# ---------------------------------------------------------------------------
+# weighted_placement: degenerate weights
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("weights", [
+    [0.0] * 8,                      # zero mass: every cut used to land at 0
+    [1e-18] * 8,                    # near-zero mass (quantile underflow)
+    [0.0, 0.0, 0.0, 1e-300],        # denormal tail
+    [np.nan, 1.0, 1.0, 1.0],        # non-finite
+    [np.inf, 1.0, 1.0, 1.0],
+    [-1.0, 2.0, 2.0, 2.0],          # negative weights are meaningless
+])
+def test_weighted_placement_degenerate_falls_back_to_equal(weights):
+    for D in (1, 2, 3, 4):
+        p = weighted_placement(weights, D)
+        q = equal_placement(len(weights), D)
+        np.testing.assert_array_equal(p.boundaries, q.boundaries)
+        assert p.n_local_max == q.n_local_max
+
+
+def test_weighted_placement_zero_prefix_and_true_pad():
+    # leading idle objects: cuts ride the mass, ranges stay a partition.
+    p = weighted_placement([0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0], 4)
+    assert p.counts().sum() == 8
+    assert np.all(p.counts() >= 0)
+    owners = p.owner_np(np.arange(8))
+    assert owners.min() >= 0 and owners.max() < 4
+    # the true pad is reported, not max(pad, 1)-papered
+    assert p.n_local_max == int(p.counts().max())
+    # the 4 heavy objects split one per device
+    np.testing.assert_array_equal(owners[4:], [0, 1, 2, 3])
+
+
+def test_weighted_placement_skew_shrinks_hot_range():
+    w = np.ones(16)
+    w[:4] = 16.0                    # hot head
+    p = weighted_placement(w, 4)
+    counts = p.counts()
+    assert counts.sum() == 16
+    assert counts[0] < counts[-1]   # hot device owns fewer objects
+    assert p.n_local_max == int(counts.max())
+
+
+# ---------------------------------------------------------------------------
+# out-of-range destinations: counted, not clamped
+# ---------------------------------------------------------------------------
+
+class OobModel(SimModel):
+    """Every object's events hop to the next object; odd objects instead
+    emit an out-of-range destination (beyond n_objects, or negative)."""
+
+    max_out = 1
+
+    def __init__(self, n_objects=8, lookahead=0.5, negative=False):
+        self._n, self.lookahead, self.negative = n_objects, lookahead, negative
+
+    @property
+    def n_objects(self):
+        return self._n
+
+    def init_object_state(self, global_ids):
+        return {"gid": jnp.asarray(np.asarray(global_ids), jnp.int32)}
+
+    def initial_events(self):
+        o = np.arange(self._n, dtype=np.int32)
+        return {"dst": o, "ts": np.full(self._n, 0.75, np.float32),
+                "seed": o.astype(np.uint32),
+                "payload": np.zeros(self._n, np.float32)}
+
+    def process_event(self, state, ts, seed, payload):
+        gid = state["gid"]
+        bad = jnp.where(self.negative, jnp.int32(-3), jnp.int32(self._n + 2))
+        dst = jnp.where(gid % 2 == 0, (gid + 2) % self._n, bad)
+        out = EmittedEvents(dst=dst[None],
+                            ts=(ts + jnp.float32(self.lookahead + 0.25))[None],
+                            seed=(seed + jnp.uint32(1))[None],
+                            payload=payload[None],
+                            valid=jnp.ones((1,), bool))
+        return state, out
+
+
+@pytest.mark.parametrize("negative", [False, True])
+def test_out_of_range_dst_is_counted_and_dropped(negative):
+    model = OobModel(negative=negative)
+    cfg = EngineConfig(lookahead=0.5, n_buckets=8, bucket_cap=16,
+                       route_cap=64, fallback_cap=64)
+    eng = ParsirEngine(model, cfg)
+    st = eng.run(eng.init(), 12)
+    tot = eng.totals(st)
+    # every odd object's event chain dies with a *counted* oob emission
+    assert tot["oob_events"] > 0
+    # and nothing was mis-delivered: the surviving even chains are intact
+    # (population = n/2 even starters) and no other counter tripped.
+    assert eng.in_flight(st) == model.n_objects // 2
+    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
+                    "late_events", "lookahead_violations"):
+        assert tot[counter] == 0, (counter, tot)
+
+
+def test_oob_initial_events_counted_at_ingest():
+    class BadInit(OobModel):
+        def initial_events(self):
+            ev = super().initial_events()
+            ev["dst"] = ev["dst"].copy()
+            ev["dst"][0] = self._n + 7        # corrupt bootstrap event
+            return ev
+
+    eng = ParsirEngine(BadInit(), EngineConfig(
+        lookahead=0.5, n_buckets=8, bucket_cap=16, route_cap=64,
+        fallback_cap=64))
+    st = eng.init()
+    assert eng.totals(st)["oob_events"] == 1
+    assert eng.in_flight(st) == 7             # the corrupt event never lands
+
+
+# ---------------------------------------------------------------------------
+# adaptive boundary recomputation: feasibility invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trial", range(10))
+def test_quantile_boundaries_feasible(trial):
+    rng = np.random.default_rng(trial)
+    D = int(rng.integers(2, 7))
+    O = int(rng.integers(D, 65))
+    eq = equal_placement(O, D)
+    M = min(O, int(np.ceil(O / D * 2.0)))
+    shift_cap = int(rng.integers(1, 9))
+    bounds = jnp.asarray(eq.boundaries, jnp.int32)
+    load = jnp.asarray(rng.integers(0, 50, O), jnp.int32)
+    nb = np.asarray(_quantile_boundaries(load, bounds, D, M, O,
+                                         jnp.int32(shift_cap)))
+    assert nb[0] == 0 and nb[-1] == O
+    assert np.all(np.diff(nb) >= 0), nb
+    assert np.all(np.diff(nb) <= M), (nb, M)
+    assert np.all(np.abs(nb[1:-1] - np.asarray(eq.boundaries)[1:-1])
+                  <= shift_cap)
+    # zero load carries no signal: boundaries stay put
+    nb0 = np.asarray(_quantile_boundaries(jnp.zeros(O, jnp.int32), bounds,
+                                          D, M, O, jnp.int32(shift_cap)))
+    np.testing.assert_array_equal(nb0, np.asarray(bounds))
+
+
+# ---------------------------------------------------------------------------
+# padded layout: non-divisible object counts (subprocess, 4 devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_non_divisible_objects_conform_multidevice():
+    # 18 objects over 4 devices → ranges 4/5/4/5 with pad rows; the padded
+    # layout must still reproduce the oracle bit-exactly, stealing included.
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = (
+        "import numpy as np, jax\n"
+        "from jax.sharding import Mesh\n"
+        "from repro.core.engine import AXIS\n"
+        "from repro.testing import conformance as cf\n"
+        "mesh = Mesh(np.array(jax.devices()[:4]), (AXIS,))\n"
+        "for config in ('batch-allgather', 'steal-a2a', 'adaptive'):\n"
+        "    r = cf.check_workload('phold', config, mesh=mesh,\n"
+        "                          model_overrides={'n_objects': 18})\n"
+        "    print('OK', config, r['totals']['processed'])\n"
+    )
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert r.stdout.count("OK") == 3

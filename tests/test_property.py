@@ -142,12 +142,28 @@ def test_equal_placement_is_partition(n_objects, n_devices):
         assert np.all(owners[lo:hi] == d)
 
 
-@given(st.lists(st.floats(0.01, 100.0), min_size=4, max_size=64),
-       st.integers(1, 8))
-def test_weighted_placement_partitions(weights, n_devices):
+@given(st.lists(st.one_of(st.just(0.0), st.floats(0.0, 100.0)),
+                min_size=4, max_size=64),
+       st.integers(1, 8),
+       st.integers(0, 64))
+def test_weighted_placement_partitions(weights, n_devices, n_zero_prefix):
+    # zeros are legal weights — including an all-zero vector and a zero
+    # prefix (idle leading objects), which used to collapse every cut onto
+    # an edge device.
+    weights = [0.0] * min(n_zero_prefix, len(weights) - 1) \
+        + weights[min(n_zero_prefix, len(weights) - 1):]
     p = weighted_placement(weights, n_devices)
     assert p.counts().sum() == len(weights)
     assert np.all(p.counts() >= 0)
+    # true pad, not papered over
+    assert p.n_local_max == int(p.counts().max())
+    # every object owned by exactly one device
+    owners = p.owner_np(np.arange(len(weights)))
+    assert owners.min() >= 0 and owners.max() < n_devices
+    if sum(weights) <= 0:
+        # degenerate mass → equal split, never everything-on-one-device
+        np.testing.assert_array_equal(
+            p.boundaries, equal_placement(len(weights), n_devices).boundaries)
 
 
 @given(st.lists(st.integers(0, 100), min_size=2, max_size=8),

@@ -32,6 +32,11 @@ SINGLE_DEVICE_CONFIGS = ["batch-allgather", "batch-a2a", "ltf",
                          "epoch-fraction"]
 # configs that only do real work with D > 1 (pairwise a2a exchange, loans).
 MULTI_DEVICE_CONFIGS = "batch-a2a,steal-allgather,steal-a2a"
+# the placement sweep axis (PR 3): equal vs weighted vs adaptive must reach
+# the identical drained state; exercised on the uniform, skewed and open
+# topologies, with and without stealing on top.
+PLACEMENT_WORKLOADS = ["phold", "phold-hotspot", "open-queueing"]
+PLACEMENT_CONFIGS = "weighted,adaptive,adaptive-a2a,steal-adaptive"
 
 
 @pytest.mark.parametrize("workload", all_workloads())
@@ -39,6 +44,16 @@ MULTI_DEVICE_CONFIGS = "batch-a2a,steal-allgather,steal-a2a"
 def test_conformance_single_device(workload, config):
     report = cf.check_workload(workload, config, ref_cache=_REF_CACHE)
     assert report["totals"]["processed"] > 0
+
+
+@pytest.mark.parametrize("workload", PLACEMENT_WORKLOADS)
+@pytest.mark.parametrize("config", ["weighted", "adaptive"])
+def test_conformance_placement_single_device(workload, config):
+    report = cf.check_workload(workload, config, ref_cache=_REF_CACHE)
+    assert report["totals"]["processed"] > 0
+    if config == "adaptive":
+        # the stage must actually fire (>= 2: n_epochs=24, rebalance_every=8)
+        assert report["totals"]["rebalances"] >= 2
 
 
 @pytest.mark.parametrize("workload",
@@ -49,6 +64,24 @@ def test_conformance_batch_model_impl(workload):
     # event-apply kernel instead of the vmap rounds loop.
     report = cf.check_workload(workload, "batch-model", ref_cache=_REF_CACHE)
     assert report["totals"]["processed"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("workload", PLACEMENT_WORKLOADS)
+def test_conformance_placement_multidevice(workload):
+    # 4 devices: uneven weighted ranges (padded rows), live rebalancing with
+    # real row migration, and rebalancing composed with loans — all bit-exact
+    # against the same oracle, firing at least twice (n_epochs=24, every 8).
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    cmd = [sys.executable, "-m", "repro.testing.conformance",
+           "--workload", workload, "--devices", "4",
+           "--configs", PLACEMENT_CONFIGS, "--expect-rebalances", "2"]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "CONFORMANCE PASS" in r.stdout
 
 
 @pytest.mark.slow
