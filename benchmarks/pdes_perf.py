@@ -61,6 +61,7 @@ _CHILD = textwrap.dedent("""
                        steal=spec.get("steal", False), steal_cap=8,
                        claim_cap=16,
                        batch_impl=spec.get("batch_impl", "rounds"),
+                       pack_tile=spec.get("pack_tile", 64),
                        placement=spec.get("placement", "equal"),
                        rebalance_every=spec.get("rebalance_every", 0),
                        migrate_cap=spec.get("migrate_cap", 16),
@@ -68,6 +69,15 @@ _CHILD = textwrap.dedent("""
     eng = ParsirEngine(model, cfg, mesh=mesh)
     st = eng.run(eng.init(), spec.get("warm", 6))
     base = eng.totals(st)["processed"]
+    # structural schedule cost of the warmed-up epoch, summed over devices:
+    # the dense rounds grid executes max_depth x n_local_max lanes per device
+    # whether occupied or not; packing executes ~the events present.  This is
+    # the padded-row-tax proxy a wide-SIMD accelerator would feel directly —
+    # CPU wall-clock mostly measures loop dispatch instead.
+    occ = eng.occupancy(st)
+    lanes = {"padded_lanes_epoch": int(occ["padded_lanes"].sum()),
+             "packed_lanes_epoch": int(occ["packed_lanes"].sum()),
+             "n_local_max": int(occ["n_local_max"])}
     t0 = time.perf_counter()
     st = eng.run(st, spec["epochs"])
     st.stats.processed.block_until_ready()
@@ -99,7 +109,7 @@ _CHILD = textwrap.dedent("""
     # the recorded counter partitions like processed/stolen/migrated do.
     tot["rebalances"] //= D
     print(json.dumps({"ev_s": n / dt, "n": n, "dt": dt, "stats": tot,
-                      "exchange_bytes_per_epoch": ex}))
+                      "exchange_bytes_per_epoch": ex, "lanes": lanes}))
 """)
 
 BASE = dict(o=512, m=40, s=256, la=0.5, dist="exponential", route_cap=8192,
@@ -138,6 +148,9 @@ def build_ladder(workload: str):
         ("baseline_paper_faithful", dict(route="allgather")),
         ("it1_route_a2a", dict(route="a2a")),
         ("it2_epoch_half_L", dict(route="a2a", epoch_len=0.25)),
+        # the width-packed scheduler (PR 4): process only the occupied event
+        # slots — the anti-padded-row-tax rung, same bits by construction.
+        ("it3_width_packed", dict(route="a2a", batch_impl="packed")),
     ]
     if workload == "phold":
         # uniform PHOLD needs explicit hot params to produce skew.
@@ -157,12 +170,23 @@ def build_ladder(workload: str):
     if workload == "phold-hotspot":
         # the placement ladder: static knapsack from the model's weight hint,
         # runtime rebalancing, and rebalancing composed with loans — measured
-        # against the equal-placement `steal_off` rung above.
+        # against the equal-placement `steal_off` rung above.  Each placement
+        # is measured under both batch impls: the `_packed` twins quantify
+        # how much of the uneven-placement loss is the padded-row tax the
+        # width-packer removes (BENCH_pr3 showed weighted/adaptive losing to
+        # equal exactly by that tax).
         pl = dict(route="a2a", bucket_cap=512, placement_slack=1.5)
         ladder += [
+            ("packed_equal", dict(route="a2a", bucket_cap=512,
+                                  batch_impl="packed")),
             ("placement_weighted", dict(pl, placement="weighted")),
+            ("placement_weighted_packed",
+             dict(pl, placement="weighted", batch_impl="packed")),
             ("placement_adaptive", dict(pl, placement="adaptive",
                                         rebalance_every=4, migrate_cap=64)),
+            ("placement_adaptive_packed",
+             dict(pl, placement="adaptive", rebalance_every=4,
+                  migrate_cap=64, batch_impl="packed")),
             ("placement_adaptive_steal",
              dict(pl, placement="adaptive", rebalance_every=4,
                   migrate_cap=64, steal=True)),

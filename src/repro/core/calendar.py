@@ -61,11 +61,13 @@ def make_calendar(n_local: int, n_buckets: int, cap: int) -> Calendar:
     )
 
 
-def _group_ranks(key: jax.Array, valid: jax.Array, sentinel: int):
+def group_ranks(key: jax.Array, valid: jax.Array, sentinel: int):
     """Sort events by group key; return (order, sorted_key, rank-in-group).
 
     rank[i] = position of sorted element i inside its contiguous key group —
-    the prefix-sum replacement for fetch_and_add slot assignment.
+    the prefix-sum replacement for fetch_and_add slot assignment.  Shared with
+    the width-packer (:mod:`repro.core.pipeline.packing`), whose unpack path
+    is the same group-and-rank scatter keyed by object row.
     """
     k = jnp.where(valid, key, sentinel)
     order = jnp.argsort(k, stable=True)
@@ -89,7 +91,7 @@ def insert(cal: Calendar, local_idx: jax.Array, epoch: jax.Array,
     bucket = (epoch % n_buckets).astype(jnp.int32)
     key = local_idx * n_buckets + bucket
     sentinel = n_local * n_buckets
-    order, ks, rank = _group_ranks(key, valid, sentinel)
+    order, ks, rank = group_ranks(key, valid, sentinel)
 
     ts_s = ts[order]
     seed_s = seed[order]
@@ -110,6 +112,18 @@ def insert(cal: Calendar, local_idx: jax.Array, epoch: jax.Array,
         jnp.ones_like(ks, jnp.int32), mode="drop")
     new_cnt = cnt_flat.reshape(cal.cnt.shape)
     return Calendar(new_ts, new_seed, new_pay, new_cnt), n_overflow
+
+
+def bucket_occupancy(cal: Calendar, epoch: jax.Array) -> jax.Array:
+    """Per-row event count of the bucket holding ``epoch`` — no drain.
+
+    The occupancy vector the width-packer's schedule is built from (round
+    ``r`` of the batch loop touches exactly the rows with ``occupancy > r``),
+    exposed separately so diagnostics (:meth:`ParsirEngine.occupancy`) and
+    tests can quantify the padded-grid vs packed work without extracting.
+    """
+    b = (epoch % cal.n_buckets).astype(jnp.int32)
+    return jax.lax.dynamic_index_in_dim(cal.cnt, b, axis=1, keepdims=False)
 
 
 def extract_sorted(cal: Calendar, epoch: jax.Array):

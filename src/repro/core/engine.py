@@ -64,7 +64,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .api import SimModel
-from .calendar import make_calendar, make_fallback
+from .calendar import bucket_occupancy, make_calendar, make_fallback
 from .events import EventBatch
 from .pipeline import (AXIS, EngineConfig, EngineState, Stats, deliver,
                        make_step, zero_stats)
@@ -196,6 +196,25 @@ class ParsirEngine:
         cal = int(np.sum(np.asarray(state.cal.cnt)))
         fb = int(np.sum(np.asarray(state.fb.events.valid)))
         return cal + fb
+
+    def occupancy(self, state: EngineState) -> dict[str, np.ndarray | int]:
+        """Width-packing diagnostics for the *current* epoch's bucket.
+
+        Per device: live event total (``events``), max per-object batch depth
+        (``max_depth``), the dense rounds grid each device would execute
+        (``padded_lanes = max_depth × n_local_max`` — every device pays its
+        own grid, in lockstep until the collective), and the events actually
+        present (``packed_lanes``, what ``batch_impl='packed'`` processes up
+        to per-round tile rounding).  The padded-row tax is the gap.
+        """
+        M = self.placement.n_local_max
+        depth = np.asarray(
+            bucket_occupancy(state.cal, state.epoch[0])).reshape(self.D, M)
+        events = depth.sum(axis=1)
+        max_depth = depth.max(axis=1, initial=0)
+        return {"events": events, "max_depth": max_depth,
+                "padded_lanes": max_depth * M, "packed_lanes": events,
+                "n_local_max": M}
 
     def boundaries_of(self, state: EngineState) -> np.ndarray:
         """The live placement boundaries, i64[D+1] (they move under

@@ -8,8 +8,10 @@ classes instead of string-dispatched branches inside one monolithic module:
   * :mod:`base`        — stage interfaces, registries, shared engine types;
   * :mod:`config`      — :class:`EngineConfig` (stage selection + capacities,
     fail-fast validation);
-  * :mod:`schedulers`  — ``batch`` (PARSIR rounds), ``batch-model`` (model
-    kernel), ``ltf``;
+  * :mod:`schedulers`  — ``batch`` (PARSIR rounds), ``batch-packed``
+    (width-packed tiles), ``batch-model`` (model kernel), ``ltf``;
+  * :mod:`packing`     — the width-packer: pack/unpack between the padded
+    calendar slice and the dense round-major work list;
   * :mod:`routers`     — ``allgather``, ``a2a``;
   * :mod:`steal`       — ``none``, ``loan``;
   * :mod:`rebalance`   — ``none``, ``adaptive`` (epoch-boundary placement
@@ -23,12 +25,13 @@ Registering a new stage::
 
     @register_scheduler("my-sched")
     class MyScheduler(Scheduler):
-        def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b, lookahead):
+        def process(self, model, cfg, obj, ts_s, seed_s, pay_s, cnt_b):
             ...
 
     EngineConfig(lookahead=0.5, scheduler="my-sched")
 """
 from . import rebalance, routers, schedulers, steal  # noqa: F401  (registration imports)
+from .packing import PackedSlice, pack_slice, unpack_slice
 from .base import (AXIS, REBALANCERS, ROUTERS, SCHEDULERS, STEAL_POLICIES,
                    EngineState, RebalancePolicy, Router, Scheduler, Stats,
                    StealPolicy, epoch_of, register_rebalancer,
@@ -48,4 +51,5 @@ __all__ = [
     "resolve_rebalance", "resolve_router", "resolve_scheduler",
     "resolve_steal",
     "epoch_of", "zero_stats", "deliver", "make_step",
+    "PackedSlice", "pack_slice", "unpack_slice",
 ]

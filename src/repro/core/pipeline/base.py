@@ -94,15 +94,17 @@ class Scheduler(abc.ABC):
         """Fail fast at engine construction if the model/config can't run."""
 
     @abc.abstractmethod
-    def process(self, model: SimModel, obj: Any, ts_s: jax.Array,
-                seed_s: jax.Array, pay_s: jax.Array, cnt_b: jax.Array,
-                lookahead: float) -> ProcessResult:
+    def process(self, model: SimModel, cfg: "EngineConfig", obj: Any,
+                ts_s: jax.Array, seed_s: jax.Array, pay_s: jax.Array,
+                cnt_b: jax.Array) -> ProcessResult:
         """Apply every object's sorted epoch batch; return emitted events.
 
         Inputs are the per-object [n_local, cap] arrays of
-        :func:`repro.core.calendar.extract_sorted`.  The returned EventBatch
-        is flat with ``valid`` masks honored downstream — a scheduler may
-        emit 0..``model.max_out`` events per processed event.
+        :func:`repro.core.calendar.extract_sorted`; ``cfg`` carries the
+        execution knobs a scheduler may consult (``lookahead``,
+        ``pack_tile``, …).  The returned EventBatch is flat with ``valid``
+        masks honored downstream — a scheduler may emit 0..``model.max_out``
+        events per processed event.
         """
 
 
@@ -219,17 +221,23 @@ def register_rebalancer(name: str):
     return _register(REBALANCERS, "rebalancer", name)
 
 
+#: the ``scheduler='batch'`` family, split by ``EngineConfig.batch_impl``
+#: (also the set of internal registry names not directly selectable).
+BATCH_IMPLS = {"rounds": "batch", "model": "batch-model",
+               "packed": "batch-packed"}
+
+
 def resolve_scheduler(cfg: "EngineConfig") -> Scheduler:
     """EngineConfig → Scheduler.
 
     The PARSIR ``batch`` scheduler is further split by ``batch_impl``
-    (``rounds`` = vmap loop, ``model`` = the model's whole-batch kernel),
-    preserving the historical config surface; any other name (``ltf``, or a
-    user-registered scheduler) is looked up directly.
+    (``rounds`` = vmap loop, ``packed`` = width-packed tiles, ``model`` = the
+    model's whole-batch kernel), preserving the historical config surface;
+    any other name (``ltf``, or a user-registered scheduler) is looked up
+    directly.
     """
     if cfg.scheduler == "batch":
-        return SCHEDULERS["batch-model" if cfg.batch_impl == "model"
-                          else "batch"]
+        return SCHEDULERS[BATCH_IMPLS[cfg.batch_impl]]
     return SCHEDULERS[cfg.scheduler]
 
 

@@ -24,7 +24,11 @@ class EngineConfig:
     fallback_cap: int = 4096         # per-device fallback list capacity
     route: str = "allgather"         # Router registry key (allgather | a2a)
     scheduler: str = "batch"         # Scheduler registry key (batch | ltf | …)
-    batch_impl: str = "rounds"       # rounds (vmap) | model (Pallas kernel)
+    batch_impl: str = "rounds"       # rounds (vmap grid) | packed (width-
+    #                                  packed tiles) | model (Pallas kernel)
+    pack_tile: int = 64              # packed: vmap tile width (clamped to the
+    #                                  local row count; schedule-only — any
+    #                                  tile yields identical bits)
     steal: bool = False
     steal_cap: int = 4               # loans a donor may publish per epoch
     claim_cap: int = 4               # loans a receiver may claim per epoch
@@ -42,15 +46,13 @@ class EngineConfig:
             raise ValueError("epoch_len must be <= lookahead (conservative)")
         object.__setattr__(self, "epoch_len", el)
 
-        caps = ["n_buckets", "bucket_cap", "route_cap", "fallback_cap"]
+        caps = ["n_buckets", "bucket_cap", "route_cap", "fallback_cap",
+                "pack_tile"]
         if self.steal:
             caps += ["steal_cap", "claim_cap"]  # 0 would silently never steal
         for cap in caps:
             if getattr(self, cap) < 1:
                 raise ValueError(f"{cap} must be >= 1, got {getattr(self, cap)}")
-        if self.batch_impl not in ("rounds", "model"):
-            raise ValueError(f"unknown batch_impl {self.batch_impl!r} "
-                             "(choose from ['rounds', 'model'])")
         if self.placement not in ("equal", "weighted", "adaptive"):
             raise ValueError(f"unknown placement {self.placement!r} "
                              "(choose from ['equal', 'weighted', 'adaptive'])")
@@ -77,32 +79,41 @@ class EngineConfig:
         # stage-name validation against the registries (populated on package
         # import; imported lazily here so config stays cycle-free).
         from . import routers, schedulers  # noqa: F401  (registration import)
-        from .base import ROUTERS, SCHEDULERS
+        from .base import BATCH_IMPLS, ROUTERS, SCHEDULERS
+        if self.batch_impl not in BATCH_IMPLS:
+            raise ValueError(f"unknown batch_impl {self.batch_impl!r} "
+                             f"(choose from {sorted(BATCH_IMPLS)})")
         if self.route not in ROUTERS:
             raise ValueError(f"unknown route {self.route!r} "
                              f"(choose from {sorted(ROUTERS)})")
-        known = sorted(set(SCHEDULERS) - {"batch-model"} | {"batch"})
-        if self.scheduler == "batch-model":
-            # internal registry name — selecting it directly would let
+        internal = set(BATCH_IMPLS.values()) - {"batch"}
+        known = sorted(set(SCHEDULERS) - internal | {"batch"})
+        if self.scheduler in internal:
+            # internal registry names — selecting one directly would let
             # scheduler and batch_impl disagree about what executes.
-            raise ValueError("scheduler 'batch-model' is internal; use "
-                             "scheduler='batch' with batch_impl='model'")
+            raise ValueError(
+                f"scheduler {self.scheduler!r} is internal; use "
+                f"scheduler='batch' with batch_impl="
+                f"{self.scheduler.split('-', 1)[1]!r}")
         if self.scheduler != "batch" and self.scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {self.scheduler!r} "
                              f"(choose from {known})")
-        if self.batch_impl == "model" and self.scheduler != "batch":
+        if self.batch_impl != "rounds" and self.scheduler != "batch":
             raise ValueError(
-                f"batch_impl='model' requires scheduler='batch' — with "
-                f"scheduler={self.scheduler!r} the model kernel would "
-                "silently never run")
+                f"batch_impl={self.batch_impl!r} requires scheduler='batch' "
+                f"— with scheduler={self.scheduler!r} it would silently "
+                "never take effect")
         if self.steal and (self.scheduler != "batch"
-                           or self.batch_impl != "rounds"):
+                           or self.batch_impl == "model"):
             # loaned batches are concatenated onto the local extract and run
-            # through the batch-rounds loop; silently ignoring another
-            # scheduler would change semantics with no Stats counter set.
+            # through the rounds-family scheduler (dense or width-packed);
+            # a model-specific whole-batch kernel can't ingest the augmented
+            # arrays, and silently ignoring another scheduler would change
+            # semantics with no Stats counter set.
             raise ValueError(
                 f"steal=True only supports scheduler='batch' with "
-                f"batch_impl='rounds' (got scheduler={self.scheduler!r}, "
+                f"batch_impl in ('rounds', 'packed') (got "
+                f"scheduler={self.scheduler!r}, "
                 f"batch_impl={self.batch_impl!r})")
 
     def validate(self, n_devices: int) -> None:

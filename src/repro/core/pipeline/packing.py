@@ -1,0 +1,144 @@
+"""Width-packing of the padded per-epoch calendar slice (paper §II-A).
+
+The ``batch`` scheduler's rounds loop executes a dense ``[n_rows, C]`` grid:
+round ``r`` vmaps :meth:`~repro.core.api.SimModel.process_event` over *every*
+padded row, live or not, so the epoch costs ``max-per-object batch depth ×
+padded row width`` regardless of how many events are actually present.  On a
+skewed workload with uneven placement (wide ``n_local_max`` pad, one deep
+object) almost every lane is wasted — the *padded-row tax* measured in
+BENCH_pr3.json.
+
+The packer compacts the slice into a dense work list ordered round-major,
+row-minor — stable by ``(round, row)``, so an object's events keep their
+(ts, seed)-sorted intra-object order and bit-exactness is preserved by
+construction:
+
+* within a round every object appears at most once, so a vmap tile drawn
+  from a single round can gather per-object state, process, and scatter it
+  back with no read-after-write conflict;
+* each round's occupied slots are padded up to a multiple of the tile width,
+  so no tile ever spans a round boundary;
+* rounds appear in increasing order, so round ``r+1`` of an object is always
+  processed in a strictly later tile than its round ``r`` — the scatter-back
+  between tiles carries the state dependency.
+
+Total work is ``sum_r ceil(occ_r / tile) * tile`` lanes — it scales with the
+events present (plus per-round tile rounding), not with the worst-case grid.
+
+The pack → unpack pair is a pure permutation of the live slots; the
+hypothesis properties in ``tests/test_property.py`` pin the round-trip,
+order- and multiset-preservation guarantees the scheduler relies on.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..calendar import group_ranks
+
+
+class PackedSlice(NamedTuple):
+    """A calendar slice compacted to a dense (round-major) work list.
+
+    Slots ``[0, n_tiles * tile)`` are organized as ``n_tiles`` vmap tiles;
+    each tile's events belong to one batch round (distinct rows).  Dead slots
+    (per-round tile padding and everything past the live region) carry
+    ``valid=False``, ``row = n_rows`` (a scatter-drop sentinel) and
+    ``ts=+inf``.
+    """
+
+    ts: jax.Array       # f32 [k_pad]
+    seed: jax.Array     # u32 [k_pad]
+    payload: jax.Array  # f32 [k_pad]
+    row: jax.Array      # i32 [k_pad] local object row (n_rows on dead slots)
+    rnd: jax.Array      # i32 [k_pad] batch round (intra-object event index)
+    valid: jax.Array    # bool [k_pad]
+    n_tiles: jax.Array  # i32 scalar — live tiles (= padded total / tile)
+    tile: int           # static effective tile width
+
+
+def effective_tile(tile: int, n_rows: int) -> int:
+    """Clamp the configured tile to the slice width (a tile wider than the
+    row count would only re-buy the padded-grid lanes packing removes)."""
+    return max(1, min(int(tile), n_rows)) if n_rows else 1
+
+
+def pack_capacity(n_rows: int, cap: int, tile: int) -> int:
+    """Static work-list capacity: every round padded to a full tile."""
+    t = effective_tile(tile, n_rows)
+    return cap * t * ((n_rows + t - 1) // t) if n_rows else 0
+
+
+def pack_slice(ts_s: jax.Array, seed_s: jax.Array, pay_s: jax.Array,
+               cnt_b: jax.Array, tile: int) -> PackedSlice:
+    """Compact a sorted ``[n_rows, C]`` calendar slice into a PackedSlice.
+
+    ``ts_s``/``seed_s``/``pay_s`` are :func:`repro.core.calendar.extract_sorted`
+    outputs (row ``o``'s live events in columns ``[0, cnt_b[o])``, (ts, seed)-
+    sorted).  Column ``r`` is round ``r``; event ``(o, r)`` lands at
+    ``round_base[r] + rank-of-o-among-live-rows`` — a stable (round, row)
+    ordering computed with prefix sums, no sort needed.
+    """
+    n_rows, cap = ts_s.shape
+    t = effective_tile(tile, n_rows)
+    k_pad = pack_capacity(n_rows, cap, tile)
+    if k_pad == 0:
+        return PackedSlice(
+            ts=jnp.zeros((0,), jnp.float32), seed=jnp.zeros((0,), jnp.uint32),
+            payload=jnp.zeros((0,), jnp.float32),
+            row=jnp.zeros((0,), jnp.int32), rnd=jnp.zeros((0,), jnp.int32),
+            valid=jnp.zeros((0,), bool), n_tiles=jnp.int32(0), tile=t)
+
+    mask = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+            < cnt_b[:, None])                                  # [n_rows, cap]
+    occ = jnp.sum(mask.astype(jnp.int32), axis=0)              # [cap]
+    rank = jnp.cumsum(mask.astype(jnp.int32), axis=0) - 1      # [n_rows, cap]
+    padded = ((occ + t - 1) // t) * t
+    base = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    pos = base[None, :] + rank
+    flat = jnp.where(mask, pos, k_pad).reshape(-1)             # drop sentinel
+
+    def scat(init, vals):
+        return init.at[flat].set(vals.reshape(-1), mode="drop")
+
+    rows = jnp.broadcast_to(
+        jnp.arange(n_rows, dtype=jnp.int32)[:, None], (n_rows, cap))
+    rnds = jnp.broadcast_to(
+        jnp.arange(cap, dtype=jnp.int32)[None, :], (n_rows, cap))
+    return PackedSlice(
+        ts=scat(jnp.full((k_pad,), jnp.inf, jnp.float32), ts_s),
+        seed=scat(jnp.zeros((k_pad,), jnp.uint32), seed_s),
+        payload=scat(jnp.zeros((k_pad,), jnp.float32), pay_s),
+        row=scat(jnp.full((k_pad,), n_rows, jnp.int32), rows),
+        rnd=scat(jnp.zeros((k_pad,), jnp.int32), rnds),
+        valid=jnp.zeros((k_pad,), bool).at[flat].set(True, mode="drop"),
+        n_tiles=jnp.sum(padded) // t,
+        tile=t)
+
+
+def unpack_slice(packed: PackedSlice, n_rows: int, cap: int):
+    """Invert :func:`pack_slice` back to the ``[n_rows, cap]`` slice layout.
+
+    Returns ``(ts, seed, payload, cnt)`` with each row's events front-packed
+    in their original (round) order and dead slots at ``ts=+inf`` — exactly
+    the :func:`~repro.core.calendar.extract_sorted` shape the packer consumed.
+    The pair being an exact round-trip (the property suite pins this) is what
+    makes "same bits, different schedule" an invariant rather than a hope.
+    """
+    order, ks, rank = group_ranks(packed.row, packed.valid, n_rows)
+    valid_s = ks < n_rows
+    dest = jnp.where(valid_s & (rank < cap), ks * cap + rank, n_rows * cap)
+
+    def scat(init, vals):
+        return init.reshape(-1).at[dest].set(
+            vals[order], mode="drop").reshape(n_rows, cap)
+
+    ts = scat(jnp.full((n_rows, cap), jnp.inf, jnp.float32), packed.ts)
+    seed = scat(jnp.zeros((n_rows, cap), jnp.uint32), packed.seed)
+    pay = scat(jnp.zeros((n_rows, cap), jnp.float32), packed.payload)
+    cnt = jnp.zeros((n_rows,), jnp.int32).at[
+        jnp.where(packed.valid, packed.row, n_rows)].add(1, mode="drop")
+    return ts, seed, pay, cnt

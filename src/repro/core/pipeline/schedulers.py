@@ -1,15 +1,27 @@
 """Scheduler stage implementations (paper §II-A).
 
-``batch``       — PARSIR's per-object batch rounds: round r applies the r-th
-                  (ts, seed)-ordered event of every object in parallel (vmap),
-                  keeping each object's state register/VMEM-hot across its
-                  whole batch.
-``batch-model`` — same schedule, but the whole per-object batch goes through
-                  the model's own ``process_batch`` kernel (e.g. the Pallas
-                  event-apply kernel) instead of the vmap rounds loop.
-``ltf``         — strict lowest-timestamp-first interleaving across objects
-                  (ROOT-Sim/USE-style), one event at a time — same results,
-                  no batch locality.  The Fig-5 analogue comparison point.
+``batch``        — PARSIR's per-object batch rounds: round r applies the r-th
+                   (ts, seed)-ordered event of every object in parallel
+                   (vmap), keeping each object's state register/VMEM-hot
+                   across its whole batch.
+``batch-packed`` — the same schedule width-packed: the occupied slots of the
+                   epoch slice are compacted round-major into a dense work
+                   list (:mod:`repro.core.pipeline.packing`) and processed in
+                   fixed-size vmap tiles with a per-tile state gather /
+                   scatter-back.  Same bits, different schedule: epoch cost
+                   scales with the events actually present instead of
+                   ``max batch depth × padded row width``.
+``batch-model``  — same schedule, but the whole per-object batch goes through
+                   the model's own ``process_batch`` kernel (e.g. the Pallas
+                   event-apply kernel) instead of the vmap rounds loop.
+``ltf``          — strict lowest-timestamp-first interleaving across objects
+                   (ROOT-Sim/USE-style), one event at a time — same results,
+                   no batch locality.  The Fig-5 analogue comparison point.
+
+Schedulers receive the live :class:`~repro.core.pipeline.config.EngineConfig`
+(``process(model, cfg, obj, …)``) so implementation knobs — ``lookahead``,
+the packer's ``pack_tile`` — stay on the config instead of leaking into the
+stage interface one positional argument at a time.
 
 All schedulers honor the generalized emission contract: each processed event
 may emit 0..``model.max_out`` events; emitted ``valid`` masks flow through
@@ -25,6 +37,7 @@ import jax.numpy as jnp
 from ..api import SimModel
 from ..events import EventBatch
 from .base import Scheduler, register_scheduler
+from .packing import pack_slice
 
 
 def process_batch_rounds(model: SimModel, obj: Any, ts_s, seed_s, pay_s,
@@ -70,9 +83,73 @@ def process_batch_rounds(model: SimModel, obj: Any, ts_s, seed_s, pay_s,
         )
         return obj, out, lv
 
-    max_r = jnp.max(cnt_b) if n_rows else jnp.int32(0)
+    # `initial=0` handles the zero-rows slice uniformly — jnp.max on an empty
+    # array would raise at trace time, and a Python shape branch here used to
+    # leave the n_rows == 0 path untested.
+    max_r = jnp.max(cnt_b, initial=0).astype(jnp.int32)
     obj, out, lv = jax.lax.fori_loop(
         0, max_r, body, (obj, out0, jnp.int32(0)))
+    flat = EventBatch(*(x.reshape(-1) for x in out))
+    return obj, flat, lv
+
+
+def process_batch_packed(model: SimModel, obj: Any, ts_s, seed_s, pay_s,
+                         cnt_b, lookahead: float, tile: int):
+    """Width-packed batch rounds: dense tiles over the occupied slots.
+
+    The slice is packed round-major (see :mod:`.packing`): tiles never span a
+    round boundary, so each tile holds at most one event per object and the
+    per-tile gather → vmap(process_event) → scatter-back is conflict-free,
+    while an object's rounds land in strictly increasing tiles (the scatter
+    carries its state forward).  Identical per-event inputs in identical
+    intra-object order ⇒ bit-identical results to ``batch``.
+    """
+    n_rows, C = ts_s.shape
+    mo = model.max_out
+    packed = pack_slice(ts_s, seed_s, pay_s, cnt_b, tile)
+    k_pad, T = packed.ts.shape[0], packed.tile
+    out0 = EventBatch(
+        dst=jnp.zeros((k_pad, mo), jnp.int32),
+        ts=jnp.full((k_pad, mo), jnp.inf, jnp.float32),
+        seed=jnp.zeros((k_pad, mo), jnp.uint32),
+        payload=jnp.zeros((k_pad, mo), jnp.float32),
+        valid=jnp.zeros((k_pad, mo), bool),
+    )
+    if k_pad == 0:
+        return obj, EventBatch(*(x.reshape(-1) for x in out0)), jnp.int32(0)
+
+    def body(t, carry):
+        obj, out, lv = carry
+        start = t * T
+        sl = lambda a: jax.lax.dynamic_slice(a, (start,), (T,))
+        rows, vvalid = sl(packed.row), sl(packed.valid)
+        vts, vseed, vpay = sl(packed.ts), sl(packed.seed), sl(packed.payload)
+
+        st = jax.tree.map(lambda l: l[jnp.clip(rows, 0, n_rows - 1)], obj)
+        new_st, emitted = jax.vmap(model.process_event)(st, vts, vseed, vpay)
+
+        # dead slots scatter to the n_rows sentinel and drop.
+        scat_rows = jnp.where(vvalid, rows, n_rows)
+        obj = jax.tree.map(
+            lambda l, n: l.at[scat_rows].set(n, mode="drop"), obj, new_st)
+
+        ev_valid = emitted.valid & vvalid[:, None]
+        lv = lv + jnp.sum((ev_valid
+                           & (emitted.ts < vts[:, None] + jnp.float32(lookahead))
+                           ).astype(jnp.int32))
+        upd = lambda dst, src: jax.lax.dynamic_update_slice(dst, src,
+                                                            (start, 0))
+        out = EventBatch(
+            dst=upd(out.dst, emitted.dst),
+            ts=upd(out.ts, jnp.where(ev_valid, emitted.ts, jnp.inf)),
+            seed=upd(out.seed, emitted.seed),
+            payload=upd(out.payload, emitted.payload),
+            valid=upd(out.valid, ev_valid),
+        )
+        return obj, out, lv
+
+    obj, out, lv = jax.lax.fori_loop(
+        0, packed.n_tiles, body, (obj, out0, jnp.int32(0)))
     flat = EventBatch(*(x.reshape(-1) for x in out))
     return obj, flat, lv
 
@@ -81,9 +158,19 @@ def process_batch_rounds(model: SimModel, obj: Any, ts_s, seed_s, pay_s,
 class BatchRoundsScheduler(Scheduler):
     """PARSIR per-object batch processing via the vmap rounds loop."""
 
-    def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b, lookahead):
+    def process(self, model, cfg, obj, ts_s, seed_s, pay_s, cnt_b):
         return process_batch_rounds(model, obj, ts_s, seed_s, pay_s, cnt_b,
-                                    lookahead)
+                                    cfg.lookahead)
+
+
+@register_scheduler("batch-packed")
+class PackedBatchScheduler(Scheduler):
+    """Width-packed batch rounds (``batch_impl='packed'``): process only the
+    occupied event slots, in ``pack_tile``-wide vmap tiles."""
+
+    def process(self, model, cfg, obj, ts_s, seed_s, pay_s, cnt_b):
+        return process_batch_packed(model, obj, ts_s, seed_s, pay_s, cnt_b,
+                                    cfg.lookahead, cfg.pack_tile)
 
 
 @register_scheduler("batch-model")
@@ -95,15 +182,17 @@ class ModelKernelScheduler(Scheduler):
         if not hasattr(model, "process_batch"):
             raise ValueError("batch_impl='model' needs model.process_batch")
 
-    def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b, lookahead):
-        return model.process_batch(obj, ts_s, seed_s, pay_s, cnt_b, lookahead)
+    def process(self, model, cfg, obj, ts_s, seed_s, pay_s, cnt_b):
+        return model.process_batch(obj, ts_s, seed_s, pay_s, cnt_b,
+                                   cfg.lookahead)
 
 
 @register_scheduler("ltf")
 class LtfScheduler(Scheduler):
     """Strict lowest-timestamp-first interleaving across objects."""
 
-    def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b, lookahead):
+    def process(self, model, cfg, obj, ts_s, seed_s, pay_s, cnt_b):
+        lookahead = cfg.lookahead
         n_rows, C = ts_s.shape
         mo = model.max_out
         rows = jnp.broadcast_to(jnp.arange(n_rows, dtype=jnp.int32)[:, None],

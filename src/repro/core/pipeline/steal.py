@@ -11,9 +11,11 @@
 
 The combinatorial loan math (donor selection, replicated planning) stays in
 :mod:`repro.core.stealing`; this module is the pipeline-facing policy that
-wires it around the processing stage.  The loan path always processes through
-the batch-rounds loop — loaned batches are concatenated onto the local
-extract, which a model-specific whole-batch kernel can't ingest.
+wires it around the processing stage.  The loan path processes through the
+rounds-family schedulers (dense ``batch`` rounds or the width-packed tiles)
+— loaned batches are concatenated onto the local extract as extra rows,
+which a model-specific whole-batch kernel can't ingest (EngineConfig fails
+fast on that combination).
 """
 from __future__ import annotations
 
@@ -22,7 +24,6 @@ import jax.numpy as jnp
 
 from .. import stealing as steal_mod
 from .base import AXIS, StealPolicy, register_steal_policy
-from .schedulers import process_batch_rounds
 
 
 @register_steal_policy("none")
@@ -31,8 +32,8 @@ class NoSteal(StealPolicy):
 
     def process(self, model, scheduler, cfg, placement, dev, obj, ts_s,
                 seed_s, pay_s, cnt_b):
-        obj, out_flat, lv = scheduler.process(model, obj, ts_s, seed_s, pay_s,
-                                              cnt_b, cfg.lookahead)
+        obj, out_flat, lv = scheduler.process(model, cfg, obj, ts_s, seed_s,
+                                              pay_s, cnt_b)
         return obj, out_flat, lv, jnp.int32(0), jnp.sum(cnt_b)
 
 
@@ -42,9 +43,9 @@ class LoanSteal(StealPolicy):
 
     def process(self, model, scheduler, cfg, placement, dev, obj, ts_s,
                 seed_s, pay_s, cnt_b):
-        # loans ride the rounds loop (see module docstring); make_step fails
-        # fast if any other scheduler is combined with steal=True.
-        del scheduler
+        # loans ride the rounds-family schedulers (see module docstring);
+        # EngineConfig fails fast if steal=True is combined with a scheduler
+        # that can't ingest the loan-augmented rows.
         D = placement.n_devices
         boundaries = jnp.asarray(placement.boundaries, jnp.int32)
 
@@ -93,8 +94,8 @@ class LoanSteal(StealPolicy):
         pay_aug = jnp.concatenate([pay_s, cl_pay], axis=0)
         cnt_aug = jnp.concatenate([cnt_b, cl_cnt], axis=0)
 
-        obj_aug, out_flat, lv = process_batch_rounds(
-            model, obj_aug, ts_aug, seed_aug, pay_aug, cnt_aug, cfg.lookahead)
+        obj_aug, out_flat, lv = scheduler.process(
+            model, cfg, obj_aug, ts_aug, seed_aug, pay_aug, cnt_aug)
         obj = jax.tree.map(lambda l: l[:n_local], obj_aug)
         ret_state = jax.tree.map(lambda l: l[n_local:], obj_aug)
 

@@ -5,7 +5,10 @@
 Stage behavior lives behind the :mod:`repro.core.pipeline.base` interfaces;
 :func:`make_step` resolves the configured Scheduler / Router / StealPolicy /
 RebalancePolicy once, runs their fail-fast validation, and returns the
-jittable step closure the engine shard_maps over the mesh.
+jittable step closure the engine shard_maps over the mesh.  The process
+stage receives the live :class:`EngineConfig` (schedulers read their knobs —
+``lookahead``, the width-packer's ``pack_tile`` — off it), so the wiring
+here stays knob-free.
 
 Placement boundaries are *state*, not trace constants: every step rebuilds a
 runtime :class:`~repro.core.placement.Placement` from ``state.bounds`` so the

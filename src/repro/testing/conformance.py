@@ -17,7 +17,9 @@ parts:
 
 ``SWEEP`` names the engine-config axes of the zoo: scheduler (batch | ltf),
 routing (allgather | a2a), stealing on/off, per-object batch implementation
-(vmap rounds | Pallas model kernel), fractional epoch length, and placement
+(vmap rounds | width-packed tiles | Pallas model kernel — ``packed`` is the
+"same bits, different schedule" axis and must stay bit-exact for every
+workload, composition and tile width), fractional epoch length, and placement
 (equal | weighted | adaptive — the oracle knows nothing of devices, so every
 packing, including runtime rebalancing with object migration, must reach the
 identical drained state).  The
@@ -57,6 +59,17 @@ SWEEP: dict[str, dict] = {
     "steal-a2a": dict(route="a2a", steal=True, steal_cap=2, claim_cap=4),
     "epoch-fraction": dict(epoch_len_frac=0.5),
     "batch-model": dict(batch_impl="model"),
+    # batch_impl axis: the width-packed scheduler must be "same bits,
+    # different schedule" — a tiny tile forces many tiles per round (and
+    # round-boundary padding) at conformance scale, where the default tile
+    # would collapse to one tile per round.
+    "batch-packed": dict(batch_impl="packed", pack_tile=4),
+    "packed-a2a": dict(route="a2a", batch_impl="packed"),
+    "steal-packed": dict(route="a2a", batch_impl="packed", pack_tile=4,
+                         steal=True, steal_cap=2, claim_cap=4),
+    "packed-adaptive": dict(batch_impl="packed", pack_tile=4,
+                            placement="adaptive", rebalance_every=8,
+                            migrate_cap=8),
     # placement axis: the same drained state must fall out of every packing
     # of objects onto devices (weighted knapsack, runtime rebalancing, and
     # rebalancing composed with loans) — the oracle knows nothing of devices.
@@ -104,13 +117,32 @@ def stack_oracle_state(obj_state: list[dict]) -> dict[str, np.ndarray]:
             for k in keys}
 
 
+def axes_of(cfg: EngineConfig, n_devices: int) -> str:
+    """The sweep coordinates of an engine config, for failure messages.
+
+    Every divergence report must say *which axis point* diverged — a bare
+    assert in a workloads × configs × devices sweep is otherwise
+    unattributable from the failure line alone.
+    """
+    impl = cfg.batch_impl
+    if impl == "packed":
+        impl += f"(tile={cfg.pack_tile})"
+    return (f"scheduler={cfg.scheduler} batch_impl={impl} "
+            f"route={cfg.route} steal={cfg.steal} "
+            f"placement={cfg.placement} epoch_len={cfg.epoch_len:g} "
+            f"D={n_devices}")
+
+
 def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
                     engine_kw: dict | None = None, mesh=None,
                     dyadic: bool = True,
-                    ref: SequentialResult | None = None) -> dict:
+                    ref: SequentialResult | None = None,
+                    label: str = "") -> dict:
     """Run ``model`` through the engine under ``overrides`` and assert full
     agreement with the sequential oracle.  Returns a report dict (totals,
-    pending count, the oracle result for reuse)."""
+    pending count, the oracle result for reuse).  ``label`` (e.g.
+    ``"phold/batch-packed"``) prefixes every failure message alongside the
+    resolved config axes, so a sweep failure names its diverging point."""
     overrides = dict(overrides)
     lookahead = model.params.lookahead
     frac = overrides.pop("epoch_len_frac", None)
@@ -123,37 +155,39 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
     cfg = EngineConfig(**kw)
 
     eng = ParsirEngine(model, cfg, mesh=mesh)
+    ctx = f"[{label + ': ' if label else ''}{axes_of(cfg, eng.D)}]"
     st = eng.run(eng.init(), n_epochs)
     tot = eng.totals(st)
 
     for counter in ("cal_overflow", "fb_overflow", "route_overflow",
                     "late_events", "lookahead_violations", "oob_events"):
-        assert tot[counter] == 0, f"{counter}={tot[counter]} (must be 0): {tot}"
+        assert tot[counter] == 0, \
+            f"{ctx} {counter}={tot[counter]} (must be 0): {tot}"
     if cfg.placement == "adaptive":
         # per-device counters: every device reports each firing, so the sum
         # is (firings × D) — nonzero iff the stage actually ran.
         assert tot["rebalances"] > 0, \
-            f"adaptive placement never rebalanced: {tot}"
+            f"{ctx} adaptive placement never rebalanced: {tot}"
 
     if ref is None:
         ref = run_sequential(model, n_epochs, cfg.epoch_len)
     assert tot["processed"] == ref.total_processed, \
-        f"processed {tot['processed']} != oracle {ref.total_processed}"
+        f"{ctx} processed {tot['processed']} != oracle {ref.total_processed}"
 
     pend = engine_pending(eng, st)
     ref_pend = ref.pending_sorted()
     assert pend.shape == ref_pend.shape, \
-        f"pending count {pend.shape[0]} != oracle {ref_pend.shape[0]}"
-    np.testing.assert_array_equal(pend, ref_pend,
-                                  err_msg="pending (dst, seed) multiset")
+        f"{ctx} pending count {pend.shape[0]} != oracle {ref_pend.shape[0]}"
+    np.testing.assert_array_equal(
+        pend, ref_pend, err_msg=f"{ctx} pending (dst, seed) multiset")
 
     if dyadic:
         want = stack_oracle_state(ref.obj_state)
         obj = eng.global_object_state(st)
-        assert set(want) == set(obj), (set(want), set(obj))
+        assert set(want) == set(obj), (ctx, set(want), set(obj))
         for k in want:
-            np.testing.assert_array_equal(obj[k], want[k],
-                                          err_msg=f"object state [{k}]")
+            np.testing.assert_array_equal(
+                obj[k], want[k], err_msg=f"{ctx} object state [{k}]")
 
     return {"totals": tot, "pending": int(pend.shape[0]), "ref": ref,
             "config": kw, "n_epochs": n_epochs}
@@ -184,7 +218,8 @@ def check_workload(name: str, config: str, *, mesh=None,
         ref = ref_cache.get(key)
     report = run_conformance(model, overrides, n_epochs=spec["n_epochs"],
                              engine_kw=engine_kw, mesh=mesh,
-                             dyadic=spec["dyadic"], ref=ref)
+                             dyadic=spec["dyadic"], ref=ref,
+                             label=f"{name}/{config}")
     if ref_cache is not None:
         ref_cache[key] = report["ref"]
     return report

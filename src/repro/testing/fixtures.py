@@ -1,0 +1,32 @@
+"""Shared builders of engine-shaped test inputs.
+
+One definition of the ``extract_sorted``-shaped random slice, consumed by
+both the deterministic packer edge tests (tests/test_pipeline.py) and the
+hypothesis properties (tests/test_property.py) — so a layout-contract change
+(e.g. the dead-slot ``ts=+inf`` sentinel) breaks every consumer at once
+instead of leaving a stale copy silently testing the old shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def random_sorted_slice(cnts, vseed: int = 0, cap: int = 6):
+    """A random ``[n_rows, cap]`` calendar slice in extract_sorted layout.
+
+    Row ``o`` holds ``cnts[o]`` live events in its leading columns; dead
+    slots carry the canonical ``ts=+inf`` sentinel.  Returns numpy arrays
+    ``(ts, seed, payload, cnt, live)`` — callers wrap in jnp as needed.
+    (Values are random, not per-row sorted: the packer's contract is
+    positional — column r is round r — so sortedness is irrelevant to the
+    pack/unpack permutation under test.)
+    """
+    rng = np.random.default_rng(vseed)
+    n_rows = len(cnts)
+    cnt = np.asarray(cnts, np.int32).reshape(n_rows)
+    live = np.arange(cap)[None, :] < cnt[:, None]
+    ts = np.where(live, rng.integers(0, 1024, (n_rows, cap)) / 1024.0,
+                  np.inf).astype(np.float32)
+    seed = rng.integers(0, 2**32, (n_rows, cap), dtype=np.uint32)
+    payload = rng.random((n_rows, cap)).astype(np.float32)
+    return ts, seed, payload, cnt, live

@@ -1,0 +1,162 @@
+"""Golden-digest regression registry: the oracle pinned to frozen history.
+
+The conformance harness (:mod:`repro.testing.conformance`) proves the engine
+agrees with the *live* sequential oracle — but if the RNG, a model's
+arithmetic, or the oracle's processing order drifts, engine and oracle drift
+*together* and every "bit-exact" assertion keeps passing.  This module pins
+sha256 digests of :func:`repro.core.ref_engine.run_sequential`'s drained
+final state — per-object processed counts, the pending ``(dst, seed)``
+multiset, and the full object-state pytree (dtype + shape + bytes) — for
+every registered workload at two sizes, in ``golden_digests.json`` next to
+this file.  Any future bit-exactness claim is thereby checked against frozen
+history, not just against whatever the oracle computes today.
+
+Every golden case runs ``dist="dyadic"`` (all floats on the 1/1024 grid with
+f32-exact partial sums), so the digests are platform-independent on any
+little-endian IEEE-754 machine.
+
+CLI::
+
+  PYTHONPATH=src python -m repro.testing.golden            # verify all
+  PYTHONPATH=src python -m repro.testing.golden --regen    # rewrite the JSON
+
+Regeneration is a *deliberate semantics change* — review the diff of
+``golden_digests.json`` like any other breaking change (every workload/size
+that moved is a workload whose event tree changed).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Iterator
+
+import numpy as np
+
+from ..core.ref_engine import SequentialResult, run_sequential
+from ..workloads.registry import all_workloads, conformance_spec, get_workload
+
+DIGEST_FILE = os.path.join(os.path.dirname(__file__), "golden_digests.json")
+
+#: the second ("medium") size per workload: model_kw overrides applied on top
+#: of the workload's CONFORMANCE model_kw, plus the horizon in epochs.  A new
+#: workload must add an entry here (and regen) — golden coverage is part of
+#: the registry contract, enforced by tests/test_golden.py.
+MEDIUM_SIZES: dict[str, tuple[dict, int]] = {
+    "phold": (dict(n_objects=48, initial_events=6), 32),
+    "phold-hotspot": (dict(n_objects=48, hot_objects=6), 32),
+    "queueing": (dict(n_stations=32, n_jobs=128), 32),
+    "cluster": (dict(n_nodes=32, n_rings=8), 48),
+    "open-queueing": (dict(n_sources=8, n_stage1=8, n_forks=8, n_stage2=8,
+                           n_sinks=8), 32),
+}
+
+
+def golden_cases() -> Iterator[tuple[str, str, dict, int]]:
+    """Yield (workload, size, model_kw, n_epochs) for every pinned case."""
+    for name in all_workloads():
+        spec = conformance_spec(name)
+        yield name, "small", spec["model_kw"], spec["n_epochs"]
+        if name not in MEDIUM_SIZES:
+            raise KeyError(
+                f"workload {name!r} has no MEDIUM_SIZES entry — every "
+                "registered workload must pin golden digests at two sizes "
+                "(add it in repro/testing/golden.py and regen)")
+        over, n_epochs = MEDIUM_SIZES[name]
+        yield name, "medium", dict(spec["model_kw"], **over), n_epochs
+
+
+def state_digest(res: SequentialResult) -> str:
+    """Canonical sha256 of a sequential run's drained final state.
+
+    Hashes (in fixed order): per-object processed counts (i64), the sorted
+    pending ``(dst, seed)`` multiset (u64), then every object's state dict in
+    key order with dtype and shape tags — so a silent dtype or layout change
+    drifts the digest even when the values happen to collide.
+    """
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(
+        res.processed_per_object.astype(np.int64)).tobytes())
+    pend = res.pending_sorted()
+    h.update(np.int64(pend.shape[0]).tobytes())
+    h.update(np.ascontiguousarray(pend.astype(np.uint64)).tobytes())
+    for st in res.obj_state:
+        for k in sorted(st):
+            v = np.asarray(st[k])
+            h.update(k.encode())
+            h.update(str(v.dtype).encode())
+            h.update(str(v.shape).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()
+
+
+def compute_digest(name: str, model_kw: dict, n_epochs: int) -> str:
+    """Run the oracle for one golden case and digest its final state."""
+    model = get_workload(name, **model_kw)
+    res = run_sequential(model, n_epochs, model.params.lookahead)
+    if res.total_processed <= 0:
+        raise AssertionError(
+            f"golden case {name} processed nothing — a digest of an idle "
+            "run pins no behavior")
+    return state_digest(res)
+
+
+def load_digests() -> dict[str, str]:
+    with open(DIGEST_FILE) as f:
+        return json.load(f)
+
+
+def verify_all() -> list[str]:
+    """Check every golden case; return human-readable drift reports."""
+    pinned = load_digests()
+    problems = []
+    seen = set()
+    for name, size, model_kw, n_epochs in golden_cases():
+        key = f"{name}/{size}"
+        seen.add(key)
+        got = compute_digest(name, model_kw, n_epochs)
+        want = pinned.get(key)
+        if want is None:
+            problems.append(f"{key}: not pinned (regen to add)")
+        elif got != want:
+            problems.append(f"{key}: digest drift {want[:12]}… → {got[:12]}…")
+    stale = sorted(set(pinned) - seen)
+    if stale:
+        problems.append(f"stale pinned keys (no matching case): {stale}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen", action="store_true",
+                    help="recompute and rewrite golden_digests.json "
+                         "(a deliberate semantics change — review the diff)")
+    args = ap.parse_args(argv)
+
+    if args.regen:
+        digests = {}
+        for name, size, model_kw, n_epochs in golden_cases():
+            digests[f"{name}/{size}"] = compute_digest(name, model_kw,
+                                                       n_epochs)
+            print(f"  {name}/{size}: {digests[f'{name}/{size}'][:16]}…")
+        with open(DIGEST_FILE, "w") as f:
+            json.dump(dict(sorted(digests.items())), f, indent=1)
+            f.write("\n")
+        print(f"[golden] wrote {len(digests)} digests to {DIGEST_FILE}")
+        return 0
+
+    problems = verify_all()
+    for p in problems:
+        print(f"DRIFT {p}")
+    if problems:
+        print("[golden] FAIL — if the change is intentional, regen with "
+              "`python -m repro.testing.golden --regen` and review the diff")
+        return 1
+    print(f"[golden] OK — {len(list(golden_cases()))} cases match pinned "
+          "digests")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,53 @@
+"""Golden-digest regression suite (tier-1): the oracle vs frozen history.
+
+The conformance sweep proves engine == oracle; these tests prove the oracle
+itself hasn't drifted from the digests pinned in
+``src/repro/testing/golden_digests.json``.  A failure here means the event
+tree of a workload changed — RNG, model arithmetic, or oracle processing
+order.  If that is intentional, regenerate deliberately::
+
+    PYTHONPATH=src python -m repro.testing.golden --regen
+
+and review the JSON diff like any breaking change.
+"""
+import pytest
+
+from repro.testing import golden
+from repro.workloads.registry import all_workloads
+
+CASES = list(golden.golden_cases())
+
+
+@pytest.mark.parametrize(
+    "name,size,model_kw,n_epochs",
+    CASES, ids=[f"{n}-{s}" for n, s, _, _ in CASES])
+def test_golden_digest_matches_pinned(name, size, model_kw, n_epochs):
+    pinned = golden.load_digests()
+    key = f"{name}/{size}"
+    assert key in pinned, \
+        f"{key} not pinned — run `python -m repro.testing.golden --regen`"
+    got = golden.compute_digest(name, model_kw, n_epochs)
+    assert got == pinned[key], (
+        f"{key}: oracle final-state digest drifted from frozen history "
+        f"({pinned[key][:16]}… → {got[:16]}…). The workload's event tree "
+        "changed; if intentional, regen golden_digests.json and review the "
+        "diff.")
+
+
+def test_every_workload_pinned_at_two_sizes():
+    # golden coverage is part of the registry contract: each workload pins
+    # exactly {small, medium}, and the JSON holds no stale keys.
+    pinned = golden.load_digests()
+    want = {f"{n}/{s}" for n, s, _, _ in CASES}
+    assert want == set(pinned), (
+        f"pinned keys diverge from registry cases: missing="
+        f"{sorted(want - set(pinned))} stale={sorted(set(pinned) - want)}")
+    for name in all_workloads():
+        assert {f"{name}/small", f"{name}/medium"} <= set(pinned), name
+
+
+def test_golden_cases_are_dyadic():
+    # digests are only platform-stable on the dyadic grid — a golden case
+    # accidentally running an inexact distribution would pin flaky bytes.
+    for name, size, model_kw, _ in CASES:
+        assert model_kw.get("dist") == "dyadic", (name, size, model_kw)

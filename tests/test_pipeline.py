@@ -6,10 +6,16 @@
   whole engine (identical results to the built-in it wraps);
 * the a2a capacity validation fails fast instead of silently spilling every
   event to fallback (route_cap // D == 0 regression);
+* the width-packer (batch_impl='packed'): deterministic edge cases
+  (all-empty / single-row / full-width slices, zero local rows) plus the
+  engine-level "same bits, different schedule" equivalence vs the dense
+  rounds loop — the hypothesis round-trip properties live in
+  test_property.py;
 * event-batch helpers (compact_mask / concat_batches / truncate) preserve
   the valid-event multiset — the algebra `route` and `deliver` stages lean
   on (property-style over seeded random batches, no hypothesis dependency).
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -18,9 +24,11 @@ from repro.core import EngineConfig, ParsirEngine
 from repro.core.events import (EventBatch, compact, compact_mask,
                                concat_batches, truncate)
 from repro.core.pipeline import (ROUTERS, SCHEDULERS, STEAL_POLICIES,
-                                 Scheduler, register_scheduler,
-                                 resolve_scheduler)
-from repro.core.pipeline.schedulers import process_batch_rounds
+                                 Scheduler, pack_slice, register_scheduler,
+                                 resolve_scheduler, unpack_slice)
+from repro.core.pipeline.schedulers import (process_batch_packed,
+                                            process_batch_rounds)
+from repro.testing.fixtures import random_sorted_slice
 from repro.workloads.registry import get_workload
 
 
@@ -29,7 +37,7 @@ from repro.workloads.registry import get_workload
 # ---------------------------------------------------------------------------
 
 def test_builtin_stages_registered():
-    assert {"batch", "batch-model", "ltf"} <= set(SCHEDULERS)
+    assert {"batch", "batch-packed", "batch-model", "ltf"} <= set(SCHEDULERS)
     assert {"allgather", "a2a"} <= set(ROUTERS)
     assert {"none", "loan"} <= set(STEAL_POLICIES)
 
@@ -39,6 +47,7 @@ def test_builtin_stages_registered():
                                     dict(batch_impl="bogus"),
                                     dict(route_cap=0),
                                     dict(n_buckets=0),
+                                    dict(pack_tile=0),
                                     dict(steal=True, steal_cap=0),
                                     dict(steal=True, claim_cap=0)])
 def test_unknown_or_degenerate_config_fails_at_construction(bad_kw):
@@ -61,6 +70,9 @@ def test_resolve_scheduler_batch_impl_split():
     assert resolve_scheduler(
         EngineConfig(lookahead=0.5, batch_impl="model")).name == "batch-model"
     assert resolve_scheduler(
+        EngineConfig(lookahead=0.5,
+                     batch_impl="packed")).name == "batch-packed"
+    assert resolve_scheduler(
         EngineConfig(lookahead=0.5, scheduler="ltf")).name == "ltf"
 
 
@@ -79,10 +91,9 @@ def test_custom_registered_scheduler_runs_end_to_end():
     if "test-echo" not in SCHEDULERS:
         @register_scheduler("test-echo")
         class EchoScheduler(Scheduler):
-            def process(self, model, obj, ts_s, seed_s, pay_s, cnt_b,
-                        lookahead):
+            def process(self, model, cfg, obj, ts_s, seed_s, pay_s, cnt_b):
                 return process_batch_rounds(model, obj, ts_s, seed_s, pay_s,
-                                            cnt_b, lookahead)
+                                            cnt_b, cfg.lookahead)
 
     model = get_workload("phold", n_objects=16, initial_events=4,
                          state_nodes=64, realloc_fraction=0.02,
@@ -98,20 +109,24 @@ def test_custom_registered_scheduler_runs_end_to_end():
 
 
 def test_inconsistent_stage_combinations_fail_at_construction():
-    # loan stealing always processes through the batch-rounds loop; pairing
+    # loan stealing processes through the rounds-family schedulers; pairing
     # it with another scheduler/impl must refuse (device-independently, at
     # config construction) rather than silently ignore the setting.
     for bad in (dict(steal=True, scheduler="ltf"),
                 dict(steal=True, batch_impl="model")):
         with pytest.raises(ValueError, match="steal"):
             EngineConfig(lookahead=0.5, **bad)
-    # batch_impl='model' under a non-batch scheduler would silently never
-    # invoke the model kernel.
-    with pytest.raises(ValueError, match="batch_impl"):
-        EngineConfig(lookahead=0.5, scheduler="ltf", batch_impl="model")
-    # the internal 'batch-model' registry name is not directly selectable.
-    with pytest.raises(ValueError, match="internal"):
-        EngineConfig(lookahead=0.5, scheduler="batch-model")
+    # ...but the width-packed impl ingests loan-augmented rows fine.
+    EngineConfig(lookahead=0.5, steal=True, batch_impl="packed")
+    # a non-rounds batch_impl under a non-batch scheduler would silently
+    # never take effect.
+    for impl in ("model", "packed"):
+        with pytest.raises(ValueError, match="batch_impl"):
+            EngineConfig(lookahead=0.5, scheduler="ltf", batch_impl=impl)
+    # the internal registry names are not directly selectable.
+    for internal in ("batch-model", "batch-packed"):
+        with pytest.raises(ValueError, match="internal"):
+            EngineConfig(lookahead=0.5, scheduler=internal)
 
 
 def test_duplicate_registration_rejected():
@@ -120,6 +135,107 @@ def test_duplicate_registration_rejected():
         class Clash(Scheduler):  # pragma: no cover - never instantiated
             def process(self, *a):
                 ...
+
+
+# ---------------------------------------------------------------------------
+# the width-packer (batch_impl='packed'): edge cases + engine equivalence
+# ---------------------------------------------------------------------------
+
+def _slice_of(cnts, cap, seed=0):
+    ts, seed_a, pay, cnt, _ = random_sorted_slice(cnts, seed, cap)
+    return (jnp.asarray(ts), jnp.asarray(seed_a), jnp.asarray(pay),
+            jnp.asarray(cnt))
+
+
+@pytest.mark.parametrize("cnts,cap,tile", [
+    ([0, 0, 0, 0], 6, 2),          # all-empty: zero tiles, nothing live
+    ([5], 5, 3),                   # single row, full depth
+    ([4] * 6, 4, 4),               # full width: every slot occupied
+    ([0, 7, 0, 1, 3], 7, 2),       # ragged
+])
+def test_pack_unpack_edge_cases(cnts, cap, tile):
+    ts, seed, pay, cnt = _slice_of(cnts, cap)
+    p = pack_slice(ts, seed, pay, cnt, tile)
+    total = int(np.sum(cnts))
+    assert int(np.asarray(p.valid).sum()) == total
+    if total == 0:
+        assert int(p.n_tiles) == 0
+    # no tile mixes rounds (the conflict-freedom invariant).
+    v = np.asarray(p.valid)
+    k = np.nonzero(v)[0]
+    rr = np.asarray(p.rnd)[v]
+    for t in np.unique(k // p.tile):
+        assert len(np.unique(rr[k // p.tile == t])) == 1
+    uts, useed, upay, ucnt = unpack_slice(p, len(cnts), cap)
+    np.testing.assert_array_equal(np.asarray(ucnt), np.asarray(cnt))
+    np.testing.assert_array_equal(np.asarray(uts), np.asarray(ts))
+    live = np.arange(cap)[None, :] < np.asarray(cnt)[:, None]
+    np.testing.assert_array_equal(np.asarray(useed)[live],
+                                  np.asarray(seed)[live])
+    np.testing.assert_array_equal(np.asarray(upay)[live],
+                                  np.asarray(pay)[live])
+
+
+def _tiny_phold():
+    return get_workload("phold", n_objects=16, initial_events=4,
+                        state_nodes=64, realloc_fraction=0.02,
+                        lookahead=0.5, dist="dyadic")
+
+
+@pytest.mark.parametrize("n_rows", [0, 3])
+@pytest.mark.parametrize("impl", ["rounds", "packed"])
+def test_schedulers_handle_empty_and_tiny_slices(n_rows, impl):
+    # n_rows == 0 is the previously-untested local-slice edge: a device that
+    # currently owns no objects must process cleanly and emit nothing.
+    model = _tiny_phold()
+    obj = model.init_object_state(np.arange(n_rows))
+    cap = 4
+    ts = jnp.full((n_rows, cap), jnp.inf, jnp.float32)
+    seed = jnp.zeros((n_rows, cap), jnp.uint32)
+    pay = jnp.zeros((n_rows, cap), jnp.float32)
+    cnt = jnp.zeros((n_rows,), jnp.int32)
+    if impl == "rounds":
+        obj2, flat, lv = process_batch_rounds(model, obj, ts, seed, pay, cnt,
+                                              0.5)
+    else:
+        obj2, flat, lv = process_batch_packed(model, obj, ts, seed, pay, cnt,
+                                              0.5, tile=2)
+    assert int(lv) == 0
+    assert int(flat.valid.sum()) == 0
+    for a, b in zip(jax.tree.leaves(obj), jax.tree.leaves(obj2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("pack_tile", [1, 4, 64])
+def test_packed_engine_bit_exact_vs_batch(pack_tile):
+    # "same bits, different schedule": any tile width must reproduce the
+    # dense rounds loop exactly — totals and final object state.
+    model = _tiny_phold()
+    kw = dict(lookahead=0.5, n_buckets=8, bucket_cap=64, route_cap=512,
+              fallback_cap=512)
+    a = ParsirEngine(model, EngineConfig(**kw))
+    b = ParsirEngine(model, EngineConfig(batch_impl="packed",
+                                         pack_tile=pack_tile, **kw))
+    sa, sb = a.run(a.init(), 16), b.run(b.init(), 16)
+    assert a.totals(sa) == b.totals(sb)
+    assert a.totals(sa)["processed"] > 0
+    oa, ob = a.global_object_state(sa), b.global_object_state(sb)
+    for k in oa:
+        np.testing.assert_array_equal(oa[k], ob[k], err_msg=k)
+
+
+def test_occupancy_reports_padded_vs_packed_lanes():
+    model = _tiny_phold()
+    eng = ParsirEngine(model, EngineConfig(lookahead=0.5, n_buckets=8,
+                                           bucket_cap=64, route_cap=512,
+                                           fallback_cap=512))
+    st = eng.run(eng.init(), 4)
+    occ = eng.occupancy(st)
+    # the dense rounds grid is never cheaper than the events present, and
+    # both reduce from the same bucket counts.
+    assert np.all(occ["padded_lanes"] >= occ["packed_lanes"])
+    assert occ["events"].sum() == int(np.asarray(
+        st.cal.cnt)[:, int(np.asarray(st.epoch)[0]) % 8].sum())
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,9 @@
 """Hypothesis property tests for the system invariants:
 
 * calendar insert/extract conserves events and never reorders per object;
+* the width-packer (batch_impl='packed') is an exact permutation: pack →
+  unpack round-trips the (ts, seed, payload, cnt) slice bit-for-bit, the
+  work list is stable by (round, row), and no vmap tile mixes rounds;
 * the event-batch algebra (compact_mask / concat_batches / truncate) the
   route/deliver stages lean on preserves the valid-event multiset;
 * the arena stack allocator keeps the free-region invariant and LIFO reuse;
@@ -18,7 +21,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import events as ev
 from repro.core.calendar import extract_sorted, insert, make_calendar
+from repro.core.pipeline.packing import pack_slice, unpack_slice
 from repro.core.placement import equal_placement, weighted_placement
+from repro.testing.fixtures import random_sorted_slice
 from repro.core.stealing import plan_loans
 from repro.phold import arena as ar
 
@@ -55,6 +60,76 @@ def test_calendar_conserves_and_orders(events):
                 assert np.all(np.diff(row) >= 0), "per-object ts order violated"
             seen += k
     assert seen == len(events)
+
+
+# --------------------------------------------------------------------------
+# the width-packer: pack → unpack is an exact, order-preserving permutation
+# --------------------------------------------------------------------------
+
+_pack_case = st.tuples(
+    st.lists(st.integers(0, 6), min_size=0, max_size=10),  # cnt per row
+    st.integers(1, 12),                                    # tile width
+    st.integers(0, 2**31 - 1),                             # value seed
+)
+
+
+def _pack_inputs(cnts, vseed, cap=6):
+    ts, seed, pay, cnt, live = random_sorted_slice(cnts, vseed, cap)
+    return ts, seed, pay, cnt, live, cap
+
+
+@given(_pack_case)
+def test_pack_unpack_roundtrips_slice_exactly(case):
+    cnts, tile, vseed = case
+    ts, seed, pay, cnt, live, cap = _pack_inputs(cnts, vseed)
+    p = pack_slice(jnp.asarray(ts), jnp.asarray(seed), jnp.asarray(pay),
+                   jnp.asarray(cnt), tile)
+    uts, useed, upay, ucnt = unpack_slice(p, len(cnts), cap)
+    np.testing.assert_array_equal(np.asarray(ucnt), cnt)
+    # dead slots come back as the canonical layout (+inf ts), live slots
+    # bit-for-bit — the whole slice, not just a multiset.
+    np.testing.assert_array_equal(np.asarray(uts), ts)
+    np.testing.assert_array_equal(np.asarray(useed)[live], seed[live])
+    np.testing.assert_array_equal(np.asarray(upay)[live], pay[live])
+
+
+@given(_pack_case)
+def test_pack_preserves_multiset_and_per_object_order(case):
+    cnts, tile, vseed = case
+    ts, seed, pay, cnt, live, cap = _pack_inputs(cnts, vseed)
+    p = pack_slice(jnp.asarray(ts), jnp.asarray(seed), jnp.asarray(pay),
+                   jnp.asarray(cnt), tile)
+    v = np.asarray(p.valid)
+    assert int(v.sum()) == int(cnt.sum())
+    rows, rnds = np.asarray(p.row)[v], np.asarray(p.rnd)[v]
+    seeds = np.asarray(p.seed)[v]
+    # multiset of (row, round, seed) is exactly the live slice slots.
+    got = sorted(zip(rows.tolist(), rnds.tolist(), seeds.tolist()))
+    r, c = np.nonzero(live)
+    want = sorted(zip(r.tolist(), c.tolist(), seed[live].tolist()))
+    assert got == want
+    # work list is stable by (round, row) ⇒ strictly increasing key ⇒ an
+    # object's rounds appear in order (intra-object causality).
+    key = rnds.astype(np.int64) * (len(cnts) + 1) + rows
+    assert np.all(np.diff(key) > 0)
+
+
+@given(_pack_case)
+def test_pack_tiles_never_mix_rounds(case):
+    # the conflict-freedom invariant the scheduler's per-tile state
+    # gather/scatter relies on: one round (⇒ distinct objects) per tile.
+    cnts, tile, vseed = case
+    ts, seed, pay, cnt, live, cap = _pack_inputs(cnts, vseed)
+    p = pack_slice(jnp.asarray(ts), jnp.asarray(seed), jnp.asarray(pay),
+                   jnp.asarray(cnt), tile)
+    v = np.asarray(p.valid)
+    k = np.nonzero(v)[0]
+    assert k.size == 0 or k.max() < int(p.n_tiles) * p.tile
+    rnds, rows = np.asarray(p.rnd)[v], np.asarray(p.row)[v]
+    for t in np.unique(k // p.tile):
+        in_tile = k // p.tile == t
+        assert len(np.unique(rnds[in_tile])) == 1
+        assert len(np.unique(rows[in_tile])) == in_tile.sum()
 
 
 _batch_rows = st.lists(

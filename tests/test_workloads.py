@@ -2,11 +2,12 @@
 
 Every registered workload must reproduce the sequential oracle — clean
 counters, equal processed count, identical pending-event multiset, bit-exact
-dyadic state — under every engine configuration: both schedulers, both
-routing strategies, stealing on/off, the Pallas batch implementation, and a
-fractional epoch length.  Single-device sweeps run in-process; the configs
-that only exist with D > 1 (real a2a exchange, work stealing) run through
-the harness's subprocess driver with 4 host devices.
+dyadic state — under every engine configuration: both schedulers, the
+batch_impl axis (dense rounds / width-packed tiles / Pallas kernel), both
+routing strategies, stealing on/off, and a fractional epoch length.
+Single-device sweeps run in-process; the configs that only exist with D > 1
+(real a2a exchange, work stealing) run through the harness's subprocess
+driver with 4 host devices.
 
 Also here: direct coverage for the stealing caps (steal_cap / claim_cap) and
 the negative-path Stats contract — undersized capacities must *count*
@@ -29,14 +30,20 @@ from repro.workloads.registry import (all_workloads, conformance_spec,
 _REF_CACHE = {}
 
 SINGLE_DEVICE_CONFIGS = ["batch-allgather", "batch-a2a", "ltf",
-                         "epoch-fraction"]
-# configs that only do real work with D > 1 (pairwise a2a exchange, loans).
-MULTI_DEVICE_CONFIGS = "batch-a2a,steal-allgather,steal-a2a"
+                         "epoch-fraction", "batch-packed"]
+# configs that only do real work with D > 1 (pairwise a2a exchange, loans);
+# the packed scheduler rides along so tiling is exercised under real
+# exchange and under loan-augmented batches.
+MULTI_DEVICE_CONFIGS = ("batch-a2a,steal-allgather,steal-a2a,"
+                        "packed-a2a,steal-packed")
 # the placement sweep axis (PR 3): equal vs weighted vs adaptive must reach
 # the identical drained state; exercised on the uniform, skewed and open
-# topologies, with and without stealing on top.
+# topologies, with and without stealing on top.  packed-adaptive (PR 4) is
+# the point of the width-packer: uneven adaptive packing without paying the
+# padded-grid schedule — still the same bits.
 PLACEMENT_WORKLOADS = ["phold", "phold-hotspot", "open-queueing"]
-PLACEMENT_CONFIGS = "weighted,adaptive,adaptive-a2a,steal-adaptive"
+PLACEMENT_CONFIGS = "weighted,adaptive,adaptive-a2a,steal-adaptive," \
+                    "packed-adaptive"
 
 
 @pytest.mark.parametrize("workload", all_workloads())
@@ -47,11 +54,12 @@ def test_conformance_single_device(workload, config):
 
 
 @pytest.mark.parametrize("workload", PLACEMENT_WORKLOADS)
-@pytest.mark.parametrize("config", ["weighted", "adaptive"])
+@pytest.mark.parametrize("config", ["weighted", "adaptive",
+                                    "packed-adaptive"])
 def test_conformance_placement_single_device(workload, config):
     report = cf.check_workload(workload, config, ref_cache=_REF_CACHE)
     assert report["totals"]["processed"] > 0
-    if config == "adaptive":
+    if config.endswith("adaptive"):
         # the stage must actually fire (>= 2: n_epochs=24, rebalance_every=8)
         assert report["totals"]["rebalances"] >= 2
 
