@@ -125,6 +125,14 @@ BENCH_MODEL_KW = {
     # open network: n_objects is split ~evenly across the five roles by
     # make(); unbounded sources keep the arrival stream going all run.
     "open-queueing": dict(),
+    # enough seeds/susceptibles that the epidemic is still growing (not
+    # burned out) across the measured window.
+    "epidemic": dict(pop=64, n_seeds=32, trans_p=128),
+    # the natively hotspot-prone load (PR 5): a hot head with extra
+    # generator streams on a finer arrival grid — what the placement
+    # ladder below rebalances.
+    "wireless": dict(n_channels=8, hot_cells=32, hot_shift=3,
+                     hot_streams=2, handoff_p=112),
 }
 
 
@@ -167,14 +175,16 @@ def build_ladder(workload: str):
             ("steal_off", dict(route="a2a", bucket_cap=512)),
             ("steal_on", dict(route="a2a", bucket_cap=512, steal=True)),
         ]
-    if workload == "phold-hotspot":
+    if workload in ("phold-hotspot", "wireless"):
         # the placement ladder: static knapsack from the model's weight hint,
         # runtime rebalancing, and rebalancing composed with loans — measured
         # against the equal-placement `steal_off` rung above.  Each placement
         # is measured under both batch impls: the `_packed` twins quantify
         # how much of the uneven-placement loss is the padded-row tax the
         # width-packer removes (BENCH_pr3 showed weighted/adaptive losing to
-        # equal exactly by that tax).
+        # equal exactly by that tax).  wireless (PR 5) runs the same ladder
+        # on a model-native hotspot — skew from the workload's own physics
+        # rather than a synthetic routing knob.
         pl = dict(route="a2a", bucket_cap=512, placement_slack=1.5)
         ladder += [
             ("packed_equal", dict(route="a2a", bucket_cap=512,

@@ -2,23 +2,34 @@
 
 The PARSIR epoch step is architecturally a fixed pipeline
 
-    extract → steal → process → route → deliver
+    extract → steal → process → rebalance → route → deliver
 
 and this module defines the narrow interfaces of its pluggable stages:
 
   * :class:`Scheduler` — how a device's per-epoch event batch is executed
-    (PARSIR batch rounds, lowest-timestamp-first, or a model-provided whole
-    batch kernel);
+    (PARSIR batch rounds, width-packed tiles, lowest-timestamp-first, or a
+    model-provided whole-batch kernel);
   * :class:`Router` — how emitted events reach their owners (`allgather`
     broadcast or pairwise `a2a` exchange);
   * :class:`StealPolicy` — whether/how epoch-granular object loans rebalance
-    load before processing.
+    load before processing;
+  * :class:`RebalancePolicy` — whether/how the placement boundaries move at
+    epoch boundaries (object + calendar-row migration).
 
 Implementations are small registered classes (``@register_scheduler("ltf")``
 …); :class:`~repro.core.pipeline.config.EngineConfig` selects them by name and
 :func:`repro.core.pipeline.step.make_step` only wires them together.  Shared
 engine types (``Stats``, ``EngineState``, epoch arithmetic) live here too so
 every stage module can import them without cycles.
+
+Bit-exactness contract: a stage implementation chooses *how* — an execution
+schedule, an exchange topology, a load split — never *what*.  Every
+registered implementation of every stage must leave the simulation's
+semantics untouched: the same processed-event multiset and (for dyadic
+workloads) bit-identical object state as the sequential oracle, for every
+composition of stages.  The differential conformance harness
+(:mod:`repro.testing.conformance`) sweeps the registry cross-product to
+enforce exactly this; register a new stage and the sweep inherits it.
 """
 from __future__ import annotations
 
@@ -86,7 +97,15 @@ ProcessResult = tuple[Any, EventBatch, jax.Array]
 
 
 class Scheduler(abc.ABC):
-    """Per-epoch batch execution strategy (pipeline stage 3, paper §II-A)."""
+    """Per-epoch batch execution strategy (pipeline stage 3, paper §II-A).
+
+    Contract: a scheduler is a *schedule*, never a semantics change.  It
+    must process each object's epoch batch in timestamp order (intra-object
+    causality) and call the model's ``process_event`` with exactly the
+    extracted (ts, seed, payload) values — so any scheduler, at any tile
+    width or round order, produces bit-identical object state and the
+    identical emitted-event multiset.
+    """
 
     name: str
 
@@ -109,7 +128,14 @@ class Scheduler(abc.ABC):
 
 
 class Router(abc.ABC):
-    """Event exchange strategy (pipeline stage 4, paper §II-B)."""
+    """Event exchange strategy (pipeline stage 5, paper §II-B).
+
+    Contract: routing moves events, never invents, drops or reorders them.
+    Events that don't fit the route buffer must be handed back (the caller
+    parks them in the fallback list) and any true capacity loss *counted* —
+    the conformance harness asserts the counters stay zero and the pending
+    multiset matches the oracle under either topology.
+    """
 
     name: str
 

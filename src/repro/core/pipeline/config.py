@@ -8,6 +8,14 @@ at *construction* time.  The one check that needs the device count —
 would be zero-sized and every event would silently spill to fallback — lives
 in :meth:`EngineConfig.validate` and is invoked by the engine (and the a2a
 router) as soon as the mesh is known.
+
+Bit-exactness contract: **no field of this record is allowed to change
+simulation semantics.**  Every legal configuration — any scheduler, batch
+implementation, router, stealing, placement, epoch length or capacity —
+must drive the engine to the sequential oracle's drained state bit-for-bit
+(the conformance SWEEP is the cross-product proof).  Capacities bound
+*buffers*, never behavior: overflow is counted in ``Stats`` and the
+affected events recirculate; nothing is silently dropped or reordered.
 """
 from __future__ import annotations
 
@@ -16,6 +24,68 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """The engine's complete configuration surface, one knob per field.
+
+    Units, defaults and valid ranges (validated in ``__post_init__`` /
+    :meth:`validate` — degenerate values fail at construction, never
+    mid-run):
+
+    ======================  =============================================
+    field                   units · default · valid range
+    ======================  =============================================
+    ``lookahead``           simulated-time units; required; > 0.  The
+                            model's conservative bound L — every emitted
+                            event satisfies ``ts_out >= ts_in + L``.
+    ``epoch_len``           simulated-time units; default ``lookahead``;
+                            (0, lookahead].  Window width of one epoch;
+                            smaller = more, emptier epochs.
+    ``n_buckets``           count; default 8; >= 1 and > the maximum
+                            epochs-ahead any model emission can land
+                            (``ceil((L + max_draw) / epoch_len)``) or
+                            inserts overflow (counted).
+    ``bucket_cap``          events per (object, bucket); default 128;
+                            >= 1.  Depth of one calendar cell — size for
+                            the hottest object's per-epoch batch.
+    ``route_cap``           events per device per epoch; default 4096;
+                            >= 1; for a2a also >= n_devices and divisible
+                            by it (per-pair sub-buffer = route_cap / D).
+    ``fallback_cap``        events per device; default 4096; >= 1.
+                            Park-list for events the exchange couldn't
+                            carry; they retry next epoch.
+    ``route``               registry name; default ``"allgather"``;
+                            {allgather, a2a} (+ user-registered).
+    ``scheduler``           registry name; default ``"batch"``; {batch,
+                            ltf} ∪ user-registered, excluding the internal
+                            batch-family names (selected via batch_impl).
+    ``batch_impl``          default ``"rounds"``; {rounds, packed, model};
+                            only with ``scheduler="batch"``.  A *schedule*
+                            choice: identical bits by contract.
+    ``pack_tile``           rows; default 64; >= 1 (clamped to the local
+                            row count).  packed's vmap tile width —
+                            schedule-only, any value yields identical bits.
+    ``steal``               bool; default False.  Epoch-granular object
+                            loans; requires the batch scheduler family
+                            with batch_impl in {rounds, packed}.
+    ``steal_cap``           loans per donor per epoch; default 4; >= 1
+                            when stealing (0 would silently never steal).
+    ``claim_cap``           loans per receiver per epoch; default 4;
+                            >= 1 when stealing.
+    ``placement``           default ``"equal"``; {equal, weighted,
+                            adaptive} (paper §II-A/§II-C knapsacks).
+    ``rebalance_every``     epochs; default 0; >= 1 iff adaptive (0 would
+                            silently never fire; nonzero otherwise is
+                            rejected as dead config).
+    ``migrate_cap``         calendar/state rows per device per rebalance;
+                            default 16; >= 2 when adaptive.  Boundary
+                            shifts are clamped to ``migrate_cap // 2`` —
+                            migration traffic is bounded by construction.
+    ``placement_slack``     ratio; default 2.0; >= 1.0 when adaptive.
+                            Static per-device row pad over the equal
+                            split — headroom for boundaries to skew
+                            without reallocation.
+    ======================  =============================================
+    """
+
     lookahead: float                 # model lookahead L
     epoch_len: float | None = None   # defaults to L; may be a fraction of it
     n_buckets: int = 8               # N — calendar epochs in flight
@@ -41,7 +111,12 @@ class EngineConfig:
     #                                  boundaries to skew)
 
     def __post_init__(self):
+        if self.lookahead <= 0:
+            raise ValueError(f"lookahead must be > 0 (the conservative bound "
+                             f"L), got {self.lookahead}")
         el = self.epoch_len if self.epoch_len is not None else self.lookahead
+        if el <= 0:
+            raise ValueError(f"epoch_len must be > 0, got {el}")
         if el > self.lookahead + 1e-9:
             raise ValueError("epoch_len must be <= lookahead (conservative)")
         object.__setattr__(self, "epoch_len", el)

@@ -1,0 +1,137 @@
+"""Docs/registry consistency checker (CI docs job + tier-1).
+
+A workload that exists in the registry but is invisible in the README zoo
+table, or has no pinned golden digests, is a workload whose contract the
+next contributor can't discover — exactly the drift this repo's docs are
+supposed to prevent.  This module statically cross-checks (no JAX, no
+oracle runs, sub-second):
+
+  1. every ``repro.workloads.registry`` id appears as a ``| `id` |`` row in
+     the README workload-zoo table (and the table names no unknown ids);
+  2. every registry id is pinned in ``golden_digests.json`` at both sizes
+     (``<id>/small`` + ``<id>/medium``; the matching ``MEDIUM_SIZES``
+     entry is enforced by tests/test_golden.py, which runs the oracle);
+  3. ``docs/writing-a-workload.md`` (the tutorial whose steps, followed
+     literally, reproduce a registration) mentions every registry id's
+     module-level contract hooks.
+
+Deliberately stdlib-only (plus the pure-python registry module): the CI
+docs job runs it with no installed dependencies, so nothing here may
+import numpy/jax — the golden JSON is read from disk, never through
+:mod:`repro.testing.golden`.
+
+CLI (the CI docs job)::
+
+  PYTHONPATH=src python -m repro.testing.docs_check [--repo-root PATH]
+
+Exit status is the number of problems; ``tests/test_docs.py`` runs the same
+checks in tier-1.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+
+from ..workloads.registry import all_workloads
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+#: hooks the writing-a-workload tutorial must document — the module-level
+#: contract every registry entry implements.
+TUTORIAL_HOOKS = ("make(", "CONFORMANCE", "process_event_np",
+                  "init_object_state_np", "MEDIUM_SIZES", "--regen",
+                  "as_emitted", "max_out", "dyadic")
+
+_HEADER_RE = re.compile(r"^\|\s*id\s*\|")
+_ROW_RE = re.compile(r"^\|\s*`([a-z0-9-]+)`\s*\|")
+
+
+def readme_zoo_ids(repo_root: str = REPO_ROOT) -> set[str]:
+    """Workload ids named by README's zoo table (``| `id` | ...`` rows).
+
+    Anchored to the table whose header row starts ``| id |`` and stopping
+    at its first non-table line — other README tables with backticked
+    first columns (scheduler names, config knobs) must not be mistaken
+    for workload rows.
+    """
+    ids: set[str] = set()
+    in_table = False
+    with open(os.path.join(repo_root, "README.md")) as f:
+        for line in f:
+            if _HEADER_RE.match(line):
+                in_table = True
+                continue
+            if in_table:
+                if not line.startswith("|"):
+                    break
+                if (m := _ROW_RE.match(line)):
+                    ids.add(m.group(1))
+    return ids
+
+
+def check_readme_table(repo_root: str = REPO_ROOT) -> list[str]:
+    ids = set(all_workloads())
+    in_table = readme_zoo_ids(repo_root)
+    problems = []
+    for missing in sorted(ids - in_table):
+        problems.append(f"README.md zoo table is missing registry workload "
+                        f"`{missing}` — add a row (state, events/arity, "
+                        f"what it stresses)")
+    for stale in sorted(in_table - ids):
+        problems.append(f"README.md zoo table names `{stale}`, which is not "
+                        f"a registered workload id")
+    return problems
+
+
+def check_golden_coverage(repo_root: str = REPO_ROOT) -> list[str]:
+    digest_file = os.path.join(repo_root, "src", "repro", "testing",
+                               "golden_digests.json")
+    with open(digest_file) as f:
+        pinned = set(json.load(f))
+    problems = []
+    for name in all_workloads():
+        for size in ("small", "medium"):
+            if f"{name}/{size}" not in pinned:
+                problems.append(
+                    f"workload `{name}` has no pinned `{name}/{size}` golden "
+                    f"digest — add a MEDIUM_SIZES entry if needed and run "
+                    f"`python -m repro.testing.golden --regen`")
+    return problems
+
+
+def check_tutorial(repo_root: str = REPO_ROOT) -> list[str]:
+    path = os.path.join(repo_root, "docs", "writing-a-workload.md")
+    if not os.path.exists(path):
+        return ["docs/writing-a-workload.md is missing — the add-a-workload "
+                "recipe must live in the repo, not in contributors' heads"]
+    with open(path) as f:
+        text = f.read()
+    return [f"docs/writing-a-workload.md never mentions `{hook}` — the "
+            f"tutorial must cover the full registration contract"
+            for hook in TUTORIAL_HOOKS if hook not in text]
+
+
+def run_all(repo_root: str = REPO_ROOT) -> list[str]:
+    return (check_readme_table(repo_root) + check_golden_coverage(repo_root)
+            + check_tutorial(repo_root))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--repo-root", default=REPO_ROOT)
+    args = ap.parse_args(argv)
+    problems = run_all(args.repo_root)
+    for p in problems:
+        print(f"DOCS DRIFT: {p}")
+    if not problems:
+        print(f"[docs_check] OK — {len(all_workloads())} workloads "
+              f"({', '.join(all_workloads())}) documented, pinned and "
+              f"tutorialized")
+    return len(problems)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

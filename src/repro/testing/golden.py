@@ -22,7 +22,17 @@ CLI::
 
 Regeneration is a *deliberate semantics change* — review the diff of
 ``golden_digests.json`` like any other breaking change (every workload/size
-that moved is a workload whose event tree changed).
+that moved is a workload whose event tree changed).  Regen etiquette:
+
+  * **new workload** → the diff must be *additive-only* (two new
+    ``<id>/small`` + ``<id>/medium`` keys); if an existing digest moved,
+    the new code leaked into another workload's event tree (shared RNG
+    helper, oracle ordering) — fix the leak or justify the break;
+  * **intentional semantics change** → regen in the same commit as the
+    change, and name the moved workloads in the commit message.
+
+Verification runs in tier-1 (tests/test_golden.py) and as its own CI step,
+so drift can't land unreviewed.
 """
 from __future__ import annotations
 
@@ -50,6 +60,8 @@ MEDIUM_SIZES: dict[str, tuple[dict, int]] = {
     "cluster": (dict(n_nodes=32, n_rings=8), 48),
     "open-queueing": (dict(n_sources=8, n_stage1=8, n_forks=8, n_stage2=8,
                            n_sinks=8), 32),
+    "epidemic": (dict(n_patches=48, pop=16, n_seeds=6), 32),
+    "wireless": (dict(n_cells=48, hot_cells=8), 32),
 }
 
 

@@ -5,9 +5,13 @@ parallelism, work stealing — are claimed fully transparent to model code
 (paper §I).  This package is that claim made testable: a registry of diverse
 workloads (uniform PHOLD, hot-spot PHOLD, a closed queueing network, a
 cluster token-ring, an open queueing network with sources/forks/sinks
-exercising multi-emission and absorption), every one written twice (JAX for
+exercising multi-emission and absorption, an epidemic SEIR patch model with
+state-dependent emission arity, and a wireless cellular/channel model with
+a natively hotspot-prone arrival field), every one written twice (JAX for
 the engine, numpy for the sequential oracle) with dyadic-exact arithmetic so
 the differential conformance harness (:mod:`repro.testing.conformance`) can
 assert bit-exact equivalence under every engine configuration.
+
+The add-a-workload recipe is ``docs/writing-a-workload.md``.
 """
 from .registry import all_workloads, conformance_spec, get_workload  # noqa: F401

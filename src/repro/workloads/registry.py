@@ -12,6 +12,15 @@ Every module under :mod:`repro.workloads` exposes:
       ``dyadic``     True → final object state must match the oracle
                      bit-for-bit
       ``supports_batch_impl``  True → the model has ``process_batch`` (Pallas)
+
+Registration contract (the full recipe is ``docs/writing-a-workload.md``):
+an id in ``WORKLOADS`` promises a JAX/numpy *pair* — ``process_event`` and
+``process_event_np`` with identical counter-based RNG streams and identical
+f32 op order — so that under ``dist="dyadic"`` every engine configuration
+reproduces the sequential oracle bit-for-bit.  Each id must also appear in
+the README zoo table and pin golden digests at two sizes
+(:mod:`repro.testing.golden`); the CI docs job
+(:mod:`repro.testing.docs_check`) and tests/test_golden.py enforce both.
 """
 from __future__ import annotations
 
@@ -24,6 +33,8 @@ WORKLOADS = {
     "queueing": "queueing",
     "cluster": "cluster",
     "open-queueing": "open_queueing",
+    "epidemic": "epidemic",
+    "wireless": "wireless",
 }
 
 

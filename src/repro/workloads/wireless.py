@@ -1,0 +1,279 @@
+"""Wireless cellular channel model — the PARSIR paper's experimental lineage
+(§IV, ref [28]: GSM-style call/handoff simulation over a cell grid).
+
+Each simulation object is a *cell* managing a fixed bank of radio channels.
+The channel state is a **dyadic-grid occupancy vector** ``free_at[C]``: entry
+``c`` is the f32 time at which channel ``c`` next becomes free — every value
+is a sum of dyadic timestamps and holding times, so it stays exactly
+representable and the numpy oracle mirror matches the engine bit-for-bit.
+
+Two event types ride the payload lane (``0.0`` = call arrival from the
+cell's own traffic generator, ``1.0`` = handoff arriving from a neighbor):
+
+  * **arrival** — the cell admits the call onto its lowest-indexed free
+    channel (``free_at[c] <= ts``) for a dyadic holding time, then re-emits
+    its own next arrival (the generator self-loop; hot cells draw the
+    inter-arrival gap on a ``2**hot_shift``-finer dyadic grid and may
+    bootstrap extra generator streams — the native hotspot).  If **no
+    channel is free the call is blocked and absorbed** (``blocked`` ledger).
+  * **handoff** — with probability ``handoff_p/256`` an admitted call moves
+    to a *geographic neighbor* cell at the end of its holding time (ring
+    topology, index wraps at both edges), where it re-runs admission: a full
+    neighbor **drops** the handoff (absorption again).  Handoff chains
+    continue with the same probability per hop.
+
+Emission arity is state-dependent (``max_out = 2``: generator self-loop +
+call lifecycle): a blocked handoff emits nothing, and a cell whose shared
+arrival budget (``max_calls``, counted across all its generator streams)
+is exhausted stops generating and drains.  The skewed arrival field
+makes this the zoo's natively hotspot-prone load — the workload
+``placement="adaptive"`` + ``batch_impl="packed"`` (PR 3/4) are measured on
+(see ``benchmarks/pdes_perf.py``'s wireless placement ladder).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import events as ev
+from ..core.api import EmittedEvents, SimModel
+from ..core.events import ring_neighbor
+
+_WL_INIT = np.uint32(0x3E11C411)
+
+#: payload codes — the event "type" rides the one f32 payload lane.
+ARRIVAL, HANDOFF = 0.0, 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessParams:
+    n_cells: int = 32
+    n_channels: int = 4            # channels per cell (occupancy vector width)
+    hot_cells: int = 0             # leading cells with boosted traffic
+    hot_shift: int = 2             # hot arrival gaps drawn on a 2**k-finer grid
+    hot_streams: int = 1           # extra bootstrap generators per hot cell
+    handoff_p: int = 96            # per-call handoff probability, out of 256
+    max_calls: int = 0             # per-CELL arrival budget shared by all of
+    #                                a cell's generator streams; 0 = unbounded
+    lookahead: float = 0.5         # L — min gap/holding-time increment
+    service_mean: float = 1.0      # scale for non-dyadic draws
+    dist: str = "dyadic"           # dyadic | uniform24 | exponential
+
+    def __post_init__(self):
+        if self.n_cells < 2:
+            raise ValueError(f"n_cells must be >= 2 (ring neighbors), "
+                             f"got {self.n_cells}")
+        if self.n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {self.n_channels}")
+        if not 0 <= self.hot_cells <= self.n_cells:
+            raise ValueError(f"hot_cells must be in [0, n_cells], "
+                             f"got {self.hot_cells}")
+        if not 0 <= self.handoff_p <= 256:
+            raise ValueError(f"handoff_p is out of 256, got {self.handoff_p}")
+
+
+class WirelessModel(SimModel):
+    max_out = 2
+
+    def __init__(self, params: WirelessParams):
+        self.params = params
+
+    @property
+    def n_objects(self) -> int:
+        return self.params.n_cells
+
+    def object_weights(self) -> np.ndarray | None:
+        """Placement hint: a hot cell carries ``(1 + hot_streams)`` generator
+        streams, each firing ~``(L + ½)/(L + ½·2**-hot_shift)`` times as
+        often as a cold cell's single stream."""
+        p = self.params
+        if p.hot_cells == 0:
+            return None
+        rate = (p.lookahead + 0.5) / (p.lookahead + 0.5 * 2.0 ** -p.hot_shift)
+        w = np.ones(p.n_cells, np.float64)
+        w[:p.hot_cells] = (1.0 + p.hot_streams) * rate
+        return w
+
+    # -- state ---------------------------------------------------------------
+
+    def init_object_state(self, global_ids: np.ndarray) -> Any:
+        n, C = len(global_ids), self.params.n_channels
+        return {
+            "gid": jnp.asarray(global_ids, jnp.int32),
+            "free_at": jnp.zeros((n, C), jnp.float32),
+            "arrivals": jnp.zeros((n,), jnp.int32),
+            "calls": jnp.zeros((n,), jnp.int32),
+            "handoffs_in": jnp.zeros((n,), jnp.int32),
+            "blocked": jnp.zeros((n,), jnp.int32),
+            "dropped": jnp.zeros((n,), jnp.int32),
+            "count": jnp.zeros((n,), jnp.int32),
+        }
+
+    def initial_events(self) -> dict[str, np.ndarray]:
+        p = self.params
+        # one generator per cell, (1 + hot_streams) for hot cells.
+        counts = np.ones(p.n_cells, np.int64)
+        counts[:p.hot_cells] += p.hot_streams
+        o = np.repeat(np.arange(p.n_cells, dtype=np.uint32), counts)
+        m = np.concatenate([np.arange(c, dtype=np.uint32) for c in counts])
+        with np.errstate(over="ignore"):
+            s0 = ev._mix_np(ev._mix_np(o ^ _WL_INIT)
+                            + m * np.uint32(0x9E3779B9))
+        ts0 = ev.draw_np(ev.fold_np(s0, 2), p.dist, p.service_mean)
+        return {
+            "dst": o.astype(np.int32),
+            "ts": ts0.astype(np.float32),
+            "seed": s0,
+            "payload": np.full(len(o), ARRIVAL, np.float32),
+        }
+
+    # -- ProcessEvent (JAX) ----------------------------------------------------
+
+    def process_event(self, state, ts, seed, payload):
+        p = self.params
+        la = jnp.float32(p.lookahead)
+        seed = seed.astype(jnp.uint32)
+        is_handoff = payload > jnp.float32(0.5)
+        is_hot = state["gid"] < p.hot_cells
+
+        # admission onto the lowest-indexed free channel of the occupancy
+        # vector (identical argmax tie-break in the numpy mirror).
+        free = state["free_at"] <= ts
+        ok = jnp.any(free)
+        idx = jnp.argmax(free)
+        hold = la + ev.draw(ev.fold(seed, 0), p.dist, p.service_mean)
+        depart = ts + hold
+        free_at = jnp.where((jnp.arange(p.n_channels) == idx) & ok,
+                            depart, state["free_at"])
+
+        one = jnp.int32(1)
+        zero = jnp.int32(0)
+        admitted = ok.astype(jnp.int32)
+        rejected = one - admitted
+        arrivals = state["arrivals"] + jnp.where(is_handoff, zero, one)
+        new_state = {
+            "gid": state["gid"],
+            "free_at": free_at,
+            "arrivals": arrivals,
+            "calls": state["calls"]
+            + jnp.where(is_handoff, zero, admitted),
+            "handoffs_in": state["handoffs_in"]
+            + jnp.where(is_handoff, admitted, zero),
+            "blocked": state["blocked"]
+            + jnp.where(is_handoff, zero, rejected),
+            "dropped": state["dropped"]
+            + jnp.where(is_handoff, rejected, zero),
+            "count": state["count"] + 1,
+        }
+
+        # lane 0: the generator self-loop (arrivals only; hot cells draw the
+        # gap on a finer dyadic grid ⇒ higher rate, exactly representable).
+        gap_hot = ev.draw_scaled(ev.fold(seed, 1), p.dist, p.hot_shift,
+                                 p.service_mean)
+        gap_cold = ev.draw(ev.fold(seed, 1), p.dist, p.service_mean)
+        ts0 = ts + (la + jnp.where(is_hot, gap_hot, gap_cold))
+        budget_ok = jnp.bool_(True) if p.max_calls == 0 \
+            else arrivals < jnp.int32(p.max_calls)
+        valid0 = (~is_handoff) & budget_ok
+
+        # lane 1: the admitted call's handoff to a ring neighbor at the end
+        # of its holding time (blocked/dropped calls emit nothing).
+        h = ev.fold(seed, 3)
+        valid1 = ok & ((h % jnp.uint32(256)) < jnp.uint32(p.handoff_p))
+        dst1 = ring_neighbor(state["gid"],
+                             ((h >> jnp.uint32(8)) & jnp.uint32(1)) == 1,
+                             p.n_cells)
+
+        out = EmittedEvents(
+            dst=jnp.stack([state["gid"], dst1]),
+            ts=jnp.stack([ts0, depart]),
+            seed=jnp.stack([ev.fold(seed, 4), ev.fold(seed, 5)]),
+            payload=jnp.stack([jnp.float32(ARRIVAL), jnp.float32(HANDOFF)]),
+            valid=jnp.stack([valid0, valid1]),
+        )
+        return new_state, out
+
+    # -- numpy mirror (sequential oracle) --------------------------------------
+
+    def init_object_state_np(self, global_ids: np.ndarray) -> list[dict]:
+        C = self.params.n_channels
+        return [{
+            "gid": np.int32(g),
+            "free_at": np.zeros(C, np.float32),
+            "arrivals": np.int32(0),
+            "calls": np.int32(0),
+            "handoffs_in": np.int32(0),
+            "blocked": np.int32(0),
+            "dropped": np.int32(0),
+            "count": np.int32(0),
+        } for g in global_ids]
+
+    def process_event_np(self, st: dict, ts, seed, payload) -> list[dict]:
+        p = self.params
+        la = np.float32(p.lookahead)
+        seed = np.uint32(seed)
+        is_handoff = float(payload) > 0.5
+        st["count"] = np.int32(st["count"] + 1)
+
+        free = st["free_at"] <= np.float32(ts)
+        ok = bool(np.any(free))
+        idx = int(np.argmax(free))
+        hold = np.float32(la + ev.draw_np(ev.fold_np(seed, 0), p.dist,
+                                          p.service_mean))
+        depart = np.float32(np.float32(ts) + hold)
+        if ok:
+            st["free_at"][idx] = depart
+            key = "handoffs_in" if is_handoff else "calls"
+        else:
+            key = "dropped" if is_handoff else "blocked"
+        st[key] = np.int32(st[key] + 1)
+        if not is_handoff:
+            st["arrivals"] = np.int32(st["arrivals"] + 1)
+
+        out = []
+        if not is_handoff:                          # generator self-loop
+            if st["gid"] < p.hot_cells:
+                gap = ev.draw_scaled_np(ev.fold_np(seed, 1), p.dist,
+                                        p.hot_shift, p.service_mean)
+            else:
+                gap = ev.draw_np(ev.fold_np(seed, 1), p.dist, p.service_mean)
+            more = p.max_calls == 0 or int(st["arrivals"]) < p.max_calls
+            out.append({"dst": np.int32(st["gid"]),
+                        "ts": np.float32(np.float32(ts)
+                                         + np.float32(la + gap)),
+                        "seed": ev.fold_np(seed, 4),
+                        "payload": np.float32(ARRIVAL),
+                        "valid": more})
+        h = ev.fold_np(seed, 3)
+        if ok and int(h % np.uint32(256)) < p.handoff_p:
+            out.append({"dst": ring_neighbor(np.int32(st["gid"]),
+                                             int((h >> np.uint32(8))
+                                                 & np.uint32(1)),
+                                             p.n_cells),
+                        "ts": depart,
+                        "seed": ev.fold_np(seed, 5),
+                        "payload": np.float32(HANDOFF)})
+        return out
+
+
+def make(**overrides) -> WirelessModel:
+    if "n_objects" in overrides:                 # workload-agnostic drivers
+        overrides["n_cells"] = overrides.pop("n_objects")
+    overrides.pop("initial_events", None)
+    return WirelessModel(WirelessParams(**overrides))
+
+
+CONFORMANCE = dict(
+    # few channels + a hot head so blocking (absorption), handoff chains and
+    # the skewed arrival field are all exercised at differential scale.
+    model_kw=dict(n_cells=16, n_channels=3, hot_cells=4, hot_shift=2,
+                  hot_streams=2, handoff_p=112, lookahead=0.5, dist="dyadic"),
+    n_epochs=24,
+    engine_kw=dict(n_buckets=8, bucket_cap=64, route_cap=512,
+                   fallback_cap=512),
+    dyadic=True,
+    supports_batch_impl=False,
+)

@@ -1,0 +1,31 @@
+"""Docs/registry consistency (tier-1 face of the CI docs job).
+
+`repro.testing.docs_check` statically cross-checks the workload registry
+against the README zoo table, the golden-digest registry, and the
+writing-a-workload tutorial — a registered workload must be discoverable
+from all three.  Running it here keeps local `pytest -q` and the CI docs
+job enforcing the identical contract.
+"""
+from repro.testing import docs_check
+
+
+def test_readme_zoo_table_names_every_workload():
+    assert docs_check.check_readme_table() == []
+
+
+def test_golden_registry_covers_every_workload():
+    assert docs_check.check_golden_coverage() == []
+
+
+def test_writing_a_workload_tutorial_is_complete():
+    assert docs_check.check_tutorial() == []
+
+
+def test_cli_exit_status_counts_problems(tmp_path):
+    # a repo root with an empty README and no docs/ must fail loudly, with
+    # one problem per missing artifact, not crash.
+    (tmp_path / "README.md").write_text("# nothing here\n")
+    problems = docs_check.check_readme_table(str(tmp_path)) \
+        + docs_check.check_tutorial(str(tmp_path))
+    assert len(problems) >= len(docs_check.all_workloads()) + 1
+    assert any("writing-a-workload" in p for p in problems)

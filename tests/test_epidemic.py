@@ -1,0 +1,131 @@
+"""Epidemic workload semantics the conformance sweep can't see.
+
+The full oracle-differential sweep lives in test_workloads.py; this file
+covers the model's negative paths directly:
+
+* a **recovered patch stops emitting** — a local step on a patch with no
+  exposed/infectious members returns nothing, and a whole small epidemic
+  burns out and drains the engine to empty;
+* **travel absorption** — travel infections landing on depleted (S = 0) or
+  already-active patches are absorbed, never spawn duplicate chains;
+* **population conservation** — S + E + I + R is invariant per patch, in
+  the oracle and bit-exactly in the engine;
+* **ring-neighbor edge wrap** — patch 0's left neighbor is n-1 and patch
+  n-1's right neighbor is 0, in both the numpy and JAX index paths.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, ParsirEngine
+from repro.core.ref_engine import run_sequential
+from repro.workloads.epidemic import LOCAL_STEP, TRAVEL, ring_neighbor
+from repro.workloads.registry import get_workload
+
+BURNOUT_KW = dict(n_patches=6, pop=3, n_seeds=2, trans_p=64,
+                  lookahead=0.5, dist="dyadic")
+
+
+def _engine(model, **cfg_kw):
+    kw = dict(lookahead=model.params.lookahead, n_buckets=8, bucket_cap=64,
+              route_cap=512, fallback_cap=512)
+    kw.update(cfg_kw)
+    return ParsirEngine(model, EngineConfig(**kw))
+
+
+def _patch(model, **over):
+    st = model.init_object_state_np(np.arange(model.n_objects))[0]
+    for k, v in over.items():
+        st[k] = np.int32(v)
+    return st
+
+
+def test_recovered_patch_local_step_emits_nothing():
+    model = get_workload("epidemic", **BURNOUT_KW)
+    # everyone recovered: the progression chain must stop (absorption).
+    st = _patch(model, s=0, e=0, i=0, r=3)
+    out = model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                                 np.float32(LOCAL_STEP))
+    assert out == []
+    assert (int(st["s"]), int(st["e"]), int(st["i"]), int(st["r"])) \
+        == (0, 0, 0, 3)
+
+
+def test_travel_on_depleted_patch_is_absorbed():
+    model = get_workload("epidemic", **BURNOUT_KW)
+    st = _patch(model, s=0, e=0, i=0, r=3)
+    out = model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                                 np.float32(TRAVEL))
+    assert out == []                       # nobody left to infect
+    assert int(st["imports"]) == 0
+
+
+def test_travel_on_active_patch_seeds_but_starts_no_second_chain():
+    model = get_workload("epidemic", **BURNOUT_KW)
+    st = _patch(model, s=2, e=1, i=1)
+    out = model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                                 np.float32(TRAVEL))
+    assert out == []                       # chain already running
+    assert int(st["imports"]) == 1 and int(st["e"]) == 2
+
+
+def test_travel_on_inactive_patch_ignites_exactly_one_chain():
+    model = get_workload("epidemic", **BURNOUT_KW)
+    st = _patch(model)                     # fresh: S=pop, E=I=R=0
+    out = model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                                 np.float32(TRAVEL))
+    assert len(out) == 1 and float(out[0]["payload"]) == LOCAL_STEP
+    assert int(out[0]["dst"]) == int(st["gid"])
+    assert float(out[0]["ts"]) >= 1.0 + BURNOUT_KW["lookahead"]
+
+
+def test_epidemic_burns_out_and_drains():
+    # tiny patches, weak transmission: every chain eventually exhausts its
+    # E+I mass and the whole event population is absorbed.
+    model = get_workload("epidemic", **BURNOUT_KW)
+    eng = _engine(model)
+    st = eng.run(eng.init(), 192)
+    tot = eng.totals(st)
+    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
+                    "late_events", "lookahead_violations"):
+        assert tot[counter] == 0, (counter, tot)
+    assert eng.in_flight(st) == 0          # recovered patches stopped emitting
+    obj = {k: np.asarray(v) for k, v in st.obj.items()}
+    assert np.all(obj["e"] == 0) and np.all(obj["i"] == 0)
+    # population conservation, per patch.
+    np.testing.assert_array_equal(
+        obj["s"] + obj["e"] + obj["i"] + obj["r"],
+        np.full(model.n_objects, BURNOUT_KW["pop"]))
+    # and the drained state matches the oracle bit-for-bit.
+    ref = run_sequential(model, 192, eng.cfg.epoch_len)
+    assert tot["processed"] == ref.total_processed
+    assert len(ref.pending_records) == 0
+    for k in ref.obj_state[0]:
+        want = np.stack([np.asarray(s[k]) for s in ref.obj_state])
+        np.testing.assert_array_equal(obj[k], want, err_msg=f"state [{k}]")
+
+
+def test_population_is_conserved_mid_flight():
+    model = get_workload("epidemic", n_patches=16, pop=12, n_seeds=3,
+                         trans_p=128, lookahead=0.5, dist="dyadic")
+    eng = _engine(model)
+    st = eng.run(eng.init(), 24)
+    obj = {k: np.asarray(v) for k, v in st.obj.items()}
+    np.testing.assert_array_equal(
+        obj["s"] + obj["e"] + obj["i"] + obj["r"],
+        np.full(model.n_objects, 12))
+    assert obj["imports"].sum() > 0        # travel actually landed somewhere
+
+
+def test_ring_neighbor_edge_wrap():
+    # covers repro.core.events.ring_neighbor once for BOTH ring workloads
+    # (epidemic travel routing and wireless handoff routing share it).
+    n = 8
+    # numpy path (the oracle): scalar ints.
+    assert int(ring_neighbor(np.int32(0), 0, n)) == n - 1      # left wrap
+    assert int(ring_neighbor(np.int32(n - 1), 1, n)) == 0      # right wrap
+    assert int(ring_neighbor(np.int32(3), 1, n)) == 4
+    # JAX path (the engine): traced arrays, boolean direction.
+    g = jnp.asarray([0, n - 1, 3], jnp.int32)
+    right = jnp.asarray([False, True, False])
+    np.testing.assert_array_equal(np.asarray(ring_neighbor(g, right, n)),
+                                  [n - 1, 0, 2])

@@ -49,10 +49,18 @@ def test_builtin_stages_registered():
                                     dict(n_buckets=0),
                                     dict(pack_tile=0),
                                     dict(steal=True, steal_cap=0),
-                                    dict(steal=True, claim_cap=0)])
+                                    dict(steal=True, claim_cap=0),
+                                    dict(epoch_len=0.0),
+                                    dict(epoch_len=-1.0)])
 def test_unknown_or_degenerate_config_fails_at_construction(bad_kw):
     with pytest.raises(ValueError):
         EngineConfig(lookahead=0.5, **bad_kw)
+
+
+@pytest.mark.parametrize("la", [0.0, -2.0])
+def test_nonpositive_lookahead_fails_at_construction(la):
+    with pytest.raises(ValueError, match="lookahead"):
+        EngineConfig(lookahead=la)
 
 
 def test_a2a_route_cap_validation_fails_fast():

@@ -271,3 +271,52 @@ def test_rng_jax_numpy_bit_identical(seed, k):
     assert a == b
     assert float(ev.dyadic10(jnp.uint32(seed))) == float(ev.dyadic10_np(np.uint32(seed)))
     assert float(ev.uniform24(jnp.uint32(seed))) == float(ev.uniform24_np(np.uint32(seed)))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 8))
+def test_dyadic_scaled_closure(bits, shift):
+    # dyadic closure of the scaled draw (wireless hot cells): the value sits
+    # exactly on the 1/(1024·2^shift) grid, inside [0, 2^-shift), and the
+    # JAX and numpy faces agree bit-for-bit.
+    a = float(ev.dyadic_scaled(jnp.uint32(bits), shift))
+    b = float(ev.dyadic_scaled_np(np.uint32(bits), shift))
+    assert a == b
+    grid = 1024 * (1 << shift)
+    scaled = a * grid
+    assert scaled == int(scaled), "left the dyadic grid"
+    assert 0.0 <= a < 2.0 ** -shift
+    # power-of-two scaling is exact: the scaled draw is literally the base
+    # draw with a shifted exponent.
+    assert a == float(ev.dyadic10_np(np.uint32(bits))) * 2.0 ** -shift
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(0, 4)),
+                min_size=1, max_size=64))
+def test_dyadic_scaled_partial_sums_are_exact(draws):
+    # the invariant workload timestamps rely on: partial sums on the
+    # 1/(1024·2^shift) grid are exactly representable below 2**(14 - shift)
+    # (the window shrinks with the refinement — f32 has 24 mantissa bits and
+    # the grid uses 10 + shift of them), so f32 accumulation order can't
+    # introduce drift between engine and oracle inside that window.
+    import fractions
+    total32 = np.float32(0.0)
+    exact = fractions.Fraction(0)
+    for bits, shift in draws:
+        d = ev.dyadic_scaled_np(np.uint32(bits), shift)
+        total32 = np.float32(total32 + d)
+        exact += fractions.Fraction(int(np.uint32(bits) & np.uint32(1023)),
+                                    1024 * (1 << shift))
+    max_shift = max(s for _, s in draws)
+    assert exact < 2 ** (14 - max_shift), "strategy left the exact window"
+    assert float(total32) == float(exact)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 6),
+       st.sampled_from(["dyadic", "uniform24"]))
+def test_draw_scaled_jax_numpy_bit_identical(bits, shift, dist):
+    # exponential is deliberately absent: log1p rounds differently in XLA
+    # and numpy, which is exactly why bit-exact conformance requires the
+    # dyadic (or pure power-of-two uniform24) grids.
+    a = float(ev.draw_scaled(jnp.uint32(bits), dist, shift))
+    b = float(ev.draw_scaled_np(np.uint32(bits), dist, shift))
+    assert a == b

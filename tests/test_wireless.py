@@ -1,0 +1,113 @@
+"""Wireless workload semantics the conformance sweep can't see.
+
+The full oracle-differential sweep lives in test_workloads.py; this file
+covers the model's negative paths directly:
+
+* the **blocked-call absorption ledger** — a cell's counters partition its
+  processed events exactly (`count = arrivals + handoffs_in + dropped`,
+  `arrivals = calls + blocked`), blocking really occurs under scarce
+  channels, and a blocked/dropped call emits no lifecycle event;
+* the **occupancy vector** admits onto the lowest-indexed free channel and
+  a full vector rejects;
+* a **budget-exhausted generator drains** the cell network to empty
+  (`max_calls`, with handoffs disabled).
+
+(Handoff routing's ring-neighbor edge wrap is covered once, in
+test_epidemic.py — both workloads share `repro.core.events.ring_neighbor`.)
+"""
+import numpy as np
+
+from repro.core import EngineConfig, ParsirEngine
+from repro.core.ref_engine import run_sequential
+from repro.workloads.registry import get_workload
+from repro.workloads.wireless import ARRIVAL, HANDOFF
+
+SCARCE_KW = dict(n_cells=8, n_channels=1, hot_cells=4, hot_shift=3,
+                 hot_streams=3, handoff_p=128, lookahead=0.5, dist="dyadic")
+
+
+def _engine(model, **cfg_kw):
+    kw = dict(lookahead=model.params.lookahead, n_buckets=8, bucket_cap=64,
+              route_cap=512, fallback_cap=512)
+    kw.update(cfg_kw)
+    return ParsirEngine(model, EngineConfig(**kw))
+
+
+def _cell(model, busy_until=None):
+    st = model.init_object_state_np(np.arange(model.n_objects))[0]
+    if busy_until is not None:
+        st["free_at"][:] = np.float32(busy_until)
+    return st
+
+
+def test_blocked_arrival_absorbs_call_but_keeps_generator():
+    model = get_workload("wireless", **SCARCE_KW)
+    st = _cell(model, busy_until=100.0)            # every channel busy
+    out = model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                                 np.float32(ARRIVAL))
+    assert int(st["blocked"]) == 1 and int(st["calls"]) == 0
+    # only the generator self-loop survives — the call itself is absorbed.
+    assert len(out) == 1 and float(out[0]["payload"]) == ARRIVAL
+    np.testing.assert_array_equal(st["free_at"], np.float32(100.0))
+
+
+def test_blocked_handoff_is_dropped_and_emits_nothing():
+    model = get_workload("wireless", **SCARCE_KW)
+    st = _cell(model, busy_until=100.0)
+    out = model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                                 np.float32(HANDOFF))
+    assert out == []                               # full absorption
+    assert int(st["dropped"]) == 1 and int(st["handoffs_in"]) == 0
+
+
+def test_admission_takes_lowest_indexed_free_channel():
+    model = get_workload("wireless", n_cells=4, n_channels=4, lookahead=0.5,
+                         dist="dyadic")
+    st = _cell(model)
+    st["free_at"][:] = np.float32([5.0, 0.25, 9.0, 0.125])  # 1 and 3 free
+    model.process_event_np(st, np.float32(1.0), np.uint32(7),
+                           np.float32(ARRIVAL))
+    assert int(st["calls"]) == 1
+    assert st["free_at"][1] >= np.float32(1.5)     # channel 1 got the call
+    assert st["free_at"][3] == np.float32(0.125)   # channel 3 untouched
+
+
+def test_blocked_ledger_partitions_processed_events():
+    # 1 channel vs a hot arrival field: blocking must actually happen, and
+    # every processed event lands in exactly one ledger bucket.
+    model = get_workload("wireless", **SCARCE_KW)
+    eng = _engine(model)
+    st = eng.run(eng.init(), 24)
+    tot = eng.totals(st)
+    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
+                    "late_events", "lookahead_violations"):
+        assert tot[counter] == 0, (counter, tot)
+    obj = {k: np.asarray(v) for k, v in st.obj.items()}
+    assert obj["blocked"].sum() > 0                # scarcity really binds
+    assert obj["dropped"].sum() > 0                # handoffs get dropped too
+    np.testing.assert_array_equal(obj["arrivals"],
+                                  obj["calls"] + obj["blocked"])
+    np.testing.assert_array_equal(
+        obj["count"],
+        obj["arrivals"] + obj["handoffs_in"] + obj["dropped"])
+    # ledger agrees with the oracle bit-for-bit (dyadic occupancy vector too).
+    ref = run_sequential(model, 24, eng.cfg.epoch_len)
+    for k in ref.obj_state[0]:
+        want = np.stack([np.asarray(s[k]) for s in ref.obj_state])
+        np.testing.assert_array_equal(obj[k], want, err_msg=f"state [{k}]")
+
+
+def test_exhausted_generators_drain_the_network():
+    # finite per-cell arrival budget, no handoffs: after every generator
+    # fires max_calls times nothing re-emits and the network empties.
+    model = get_workload("wireless", n_cells=6, n_channels=2, max_calls=3,
+                         handoff_p=0, lookahead=0.5, dist="dyadic")
+    eng = _engine(model)
+    st = eng.run(eng.init(), 64)
+    tot = eng.totals(st)
+    assert eng.in_flight(st) == 0
+    obj = {k: np.asarray(v) for k, v in st.obj.items()}
+    np.testing.assert_array_equal(obj["arrivals"], np.full(6, 3))
+    np.testing.assert_array_equal(obj["calls"] + obj["blocked"],
+                                  obj["arrivals"])
+    assert tot["processed"] == 6 * 3

@@ -40,8 +40,11 @@ MULTI_DEVICE_CONFIGS = ("batch-a2a,steal-allgather,steal-a2a,"
 # the identical drained state; exercised on the uniform, skewed and open
 # topologies, with and without stealing on top.  packed-adaptive (PR 4) is
 # the point of the width-packer: uneven adaptive packing without paying the
-# padded-grid schedule — still the same bits.
-PLACEMENT_WORKLOADS = ["phold", "phold-hotspot", "open-queueing"]
+# padded-grid schedule — still the same bits.  epidemic and wireless (PR 5)
+# are the state-dependent-arity and natively-hotspot loads the adaptive +
+# packed machinery was built for.
+PLACEMENT_WORKLOADS = ["phold", "phold-hotspot", "open-queueing",
+                       "epidemic", "wireless"]
 PLACEMENT_CONFIGS = "weighted,adaptive,adaptive-a2a,steal-adaptive," \
                     "packed-adaptive"
 
