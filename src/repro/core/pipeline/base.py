@@ -44,6 +44,7 @@ from ..api import SimModel
 from ..calendar import Calendar, Fallback
 from ..events import EventBatch
 from ..placement import Placement
+from .names import BATCH_IMPLS  # noqa: F401  (re-export; names.py is jax-free)
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
     from .config import EngineConfig
@@ -135,9 +136,20 @@ class Router(abc.ABC):
     parks them in the fallback list) and any true capacity loss *counted* —
     the conformance harness asserts the counters stay zero and the pending
     multiset matches the oracle under either topology.
+
+    ``replicated`` declares the exchange's output topology so per-event
+    counters downstream can be reduced correctly: True means every device
+    sees the *same* routed batch (allgather broadcast — count each event
+    once globally, e.g. on device 0), False means each device sees a
+    *distinct* slice (pairwise a2a — every device counts its own events).
+    Getting this wrong silently over- or under-counts delivery-side
+    ``oob_events``.
     """
 
     name: str
+    #: True if exchange() presents an identical batch on every device
+    #: (broadcast); False if each device receives a distinct slice.
+    replicated: bool = True
 
     def validate(self, cfg: "EngineConfig", placement: Placement) -> None:
         """Fail fast at engine construction on bad capacity/topology."""
@@ -245,12 +257,6 @@ def register_steal_policy(name: str):
 def register_rebalancer(name: str):
     """Class decorator: register a :class:`RebalancePolicy` under ``name``."""
     return _register(REBALANCERS, "rebalancer", name)
-
-
-#: the ``scheduler='batch'`` family, split by ``EngineConfig.batch_impl``
-#: (also the set of internal registry names not directly selectable).
-BATCH_IMPLS = {"rounds": "batch", "model": "batch-model",
-               "packed": "batch-packed"}
 
 
 def resolve_scheduler(cfg: "EngineConfig") -> Scheduler:

@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from .names import PLACEMENTS
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -128,9 +130,9 @@ class EngineConfig:
         for cap in caps:
             if getattr(self, cap) < 1:
                 raise ValueError(f"{cap} must be >= 1, got {getattr(self, cap)}")
-        if self.placement not in ("equal", "weighted", "adaptive"):
+        if self.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {self.placement!r} "
-                             "(choose from ['equal', 'weighted', 'adaptive'])")
+                             f"(choose from {list(PLACEMENTS)})")
         if self.placement == "adaptive":
             if self.rebalance_every < 1:
                 raise ValueError(

@@ -10,11 +10,16 @@ current epoch).
 Out-of-range ``dst`` (< 0 or >= n_objects) would otherwise be *silently
 mangled*: ``Placement.owner``'s searchsorted lands ``dst >= n_objects`` on
 the last device and the local-index clip would then insert the event into the
-wrong object's calendar.  Here such events are excluded from ``mine`` and
-counted once (on device 0 — the only deliver-side source of oob events is the
-replicated initial ingest; the step excludes oob at the producer before
-routing).  Drivers treat a nonzero ``stats.oob_events`` as a hard error, like
-overflow.
+wrong object's calendar.  Such events are excluded from ``mine`` and counted
+with a **replication-aware reduction**: an oob dst has no well-defined owner,
+so when the incoming batch is replicated across devices (the initial ingest,
+or an ``allgather``-routed exchange) only device 0 counts it — the per-device
+``Stats`` are summed globally, so counting everywhere would report D× the
+truth — while a per-device-distinct batch (``a2a``-routed slices) is counted
+where it lands, since each corrupt event exists on exactly one device.
+(Counting only on device 0 unconditionally, as this stage once did,
+*undercounted* any deliver-side oob arriving via a2a on devices 1..D-1.)
+Drivers treat a nonzero ``stats.oob_events`` as a hard error, like overflow.
 """
 from __future__ import annotations
 
@@ -27,17 +32,22 @@ from .base import epoch_of
 
 
 def deliver(cal: Calendar, fb: Fallback, batch: EventBatch, cur, dev,
-            placement: Placement, cfg, init: bool):
+            placement: Placement, cfg, init: bool, replicated: bool = True):
     """Insert my in-horizon events; park my beyond-horizon events in fallback.
 
-    Returns (cal, fb, n_cal_overflow, n_fb_overflow, n_late, n_oob).
+    ``replicated`` declares whether ``batch`` is identical on every device
+    (broadcast exchange / initial ingest — oob counted once, on device 0) or
+    a per-device-distinct slice (a2a — oob counted where it lands; see the
+    module docstring).  Returns (cal, fb, n_cal_overflow, n_fb_overflow,
+    n_late, n_oob).
     """
     N = cfg.n_buckets
     epochs = epoch_of(batch.ts, cfg.epoch_len)
     boundaries = jnp.asarray(placement.boundaries, jnp.int32)
     oob = batch.valid & ((batch.dst < 0)
                          | (batch.dst >= placement.n_objects))
-    n_oob = jnp.where(dev == 0, jnp.sum(oob.astype(jnp.int32)), 0)
+    n_oob_local = jnp.sum(oob.astype(jnp.int32))
+    n_oob = jnp.where(dev == 0, n_oob_local, 0) if replicated else n_oob_local
     owner = placement.owner(batch.dst)
     mine = batch.valid & ~oob & (owner == dev)
     lo = jnp.int32(0) if init else cur + 1

@@ -1,0 +1,30 @@
+"""Selectable stage names, importable without JAX.
+
+Single source of truth for the *user-facing* choice sets of the pipeline
+(`EngineConfig` fields, CLI ``choices=``).  The live registries in
+:mod:`repro.core.pipeline.base` are populated by importing the stage modules
+— which import JAX — so anything that must enumerate the choices in a
+dependency-free context (the CI docs job, :mod:`repro.testing.docs_check`'s
+CLI cross-check) reads this module instead.  ``tests/test_pipeline.py``
+asserts these constants match the populated registries, so they cannot
+silently drift.
+
+This module must stay stdlib-only (no jax, no numpy): docs_check loads it
+by file path in an environment with nothing installed.
+"""
+from __future__ import annotations
+
+#: the ``scheduler='batch'`` family, split by ``EngineConfig.batch_impl``
+#: (keys = selectable batch_impl values, values = internal registry names).
+BATCH_IMPLS: dict[str, str] = {"rounds": "batch", "model": "batch-model",
+                               "packed": "batch-packed"}
+
+#: directly selectable ``EngineConfig.scheduler`` names (the internal
+#: batch-family registry names are reached via ``batch_impl``, never named).
+SELECTABLE_SCHEDULERS: tuple[str, ...] = ("batch", "ltf")
+
+#: ``EngineConfig.route`` registry keys.
+ROUTES: tuple[str, ...] = ("allgather", "a2a")
+
+#: ``EngineConfig.placement`` values (paper §II-A/§II-C knapsacks).
+PLACEMENTS: tuple[str, ...] = ("equal", "weighted", "adaptive")

@@ -35,6 +35,8 @@ def _select_send_global(prod: EventBatch, eligible, cfg):
 class AllGatherRouter(Router):
     """Broadcast exchange — every device sees every route buffer."""
 
+    replicated = True   # exchange() output is identical on every device
+
     def select_send(self, prod, eligible, placement, cfg):
         return _select_send_global(prod, eligible, cfg)
 
@@ -48,6 +50,8 @@ class AllGatherRouter(Router):
 @register_router("a2a")
 class AllToAllRouter(Router):
     """Pairwise exchange with per-destination-device sub-buffers."""
+
+    replicated = False  # each device receives a distinct routed slice
 
     def validate(self, cfg, placement):
         cfg.validate(placement.n_devices)

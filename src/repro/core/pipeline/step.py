@@ -100,9 +100,12 @@ def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
 
         routed = router.exchange(route_buf, pl, cfg)
 
-        # 5. deliver — owners insert into calendar buckets / fallback.
+        # 5. deliver — owners insert into calendar buckets / fallback.  The
+        # router declares its output topology: a broadcast batch is counted
+        # once globally, a per-device a2a slice is counted where it lands.
         cal, fb, cal_ovf, fb_ovf2, late2, oob2 = deliver(
-            cal, fb, routed, cur, dev, pl, cfg, init=False)
+            cal, fb, routed, cur, dev, pl, cfg, init=False,
+            replicated=router.replicated)
 
         st = state.stats
         stats = Stats(

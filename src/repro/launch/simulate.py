@@ -1,7 +1,25 @@
 """CLI simulation driver (the paper-kind end-to-end entry point).
 
-  PYTHONPATH=src python -m repro.launch.simulate --objects 1024 --initial 20 \
-      --lookahead 0.5 --epochs 100 [--steal] [--route a2a] [--verify]
+  PYTHONPATH=src python -m repro.launch.simulate --workload phold \\
+      --epochs 100 [--devices 2] [--scheduler ltf] [--route a2a] \\
+      [--batch-impl packed] [--placement adaptive --rebalance-every 4] \\
+      [--steal] [--drain] [--model-kw n_channels=2] [--verify]
+
+Every choice-typed flag is driven by the live registries — the workload zoo
+(:mod:`repro.workloads.registry`) and the pipeline stage names
+(:mod:`repro.core.pipeline.names`) — so a newly registered workload, batch
+implementation or placement shows up here without touching this file
+(:mod:`repro.testing.docs_check` cross-checks that this stays true).
+
+Exit contract: any nonzero overflow/causality counter is a **failed run**
+(events were dropped or misordered; the perf line printed above it is
+meaningless) and the process exits nonzero via the shared
+:func:`repro.testing.assert_clean` checker.
+
+``--drain`` completes the whole simulation as one fused on-device dispatch
+(:meth:`ParsirEngine.run_until_drained` bounded by ``--epochs``) instead of
+a fixed horizon; ``--verify`` cross-checks the final object state bit-exactly
+against the sequential oracle for any workload under ``--dist dyadic``.
 """
 from __future__ import annotations
 
@@ -9,70 +27,133 @@ import argparse
 import time
 
 
+def parse_kv(pairs: list[str]) -> dict:
+    """``k=v`` strings → kwargs dict (python-literal values, else str)."""
+    import ast
+    out = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise SystemExit(f"--model-kw expects k=v, got {pair!r}")
+        k, v = pair.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (SyntaxError, ValueError):
+            out[k] = v
+    return out
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    from ..core.pipeline.names import (BATCH_IMPLS, PLACEMENTS, ROUTES,
+                                       SELECTABLE_SCHEDULERS)
+    from ..workloads.registry import all_workloads
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", default="phold", choices=all_workloads())
     ap.add_argument("--objects", type=int, default=512)
-    ap.add_argument("--initial", type=int, default=20)
-    ap.add_argument("--state-nodes", type=int, default=512)
-    ap.add_argument("--realloc", type=float, default=0.004)
     ap.add_argument("--lookahead", type=float, default=0.5)
     ap.add_argument("--epoch-len", type=float, default=None)
     ap.add_argument("--dist", default="exponential",
                     choices=["exponential", "uniform24", "dyadic"])
-    ap.add_argument("--epochs", type=int, default=100)
-    ap.add_argument("--scheduler", default="batch", choices=["batch", "ltf"])
-    ap.add_argument("--route", default="allgather",
-                    choices=["allgather", "a2a"])
-    ap.add_argument("--steal", action="store_true")
+    ap.add_argument("--model-kw", action="append", default=[],
+                    metavar="K=V", help="extra workload make() override "
+                    "(repeatable), e.g. --model-kw max_calls=8")
+    ap.add_argument("--epochs", type=int, default=100,
+                    help="epochs to run (--drain: the drain bound)")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--scheduler", default="batch",
+                    choices=list(SELECTABLE_SCHEDULERS))
+    ap.add_argument("--route", default="allgather", choices=list(ROUTES))
     ap.add_argument("--batch-impl", default="rounds",
-                    choices=["rounds", "model"])
+                    choices=list(BATCH_IMPLS))
+    ap.add_argument("--pack-tile", type=int, default=64)
+    ap.add_argument("--steal", action="store_true")
+    ap.add_argument("--placement", default="equal", choices=list(PLACEMENTS))
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="adaptive placement: epochs between rebalances")
+    ap.add_argument("--migrate-cap", type=int, default=16)
+    ap.add_argument("--placement-slack", type=float, default=2.0)
+    ap.add_argument("--n-buckets", type=int, default=16)
+    ap.add_argument("--bucket-cap", type=int, default=256)
+    ap.add_argument("--route-cap", type=int, default=8192)
+    ap.add_argument("--fallback-cap", type=int, default=8192)
+    ap.add_argument("--drain", action="store_true",
+                    help="run to empty as ONE fused on-device dispatch "
+                         "(run_until_drained, bounded by --epochs)")
     ap.add_argument("--verify", action="store_true",
-                    help="cross-check against the sequential oracle "
-                         "(dyadic dist only)")
+                    help="cross-check final object state against the "
+                         "sequential oracle (dyadic dist only)")
     args = ap.parse_args()
 
-    from ..core.engine import EngineConfig, ParsirEngine
-    from ..phold.model import Phold, PholdParams
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
 
-    model = Phold(PholdParams(
-        n_objects=args.objects, initial_events=args.initial,
-        state_nodes=args.state_nodes, realloc_fraction=args.realloc,
-        lookahead=args.lookahead, dist=args.dist))
+    from ..core.engine import AXIS, EngineConfig, ParsirEngine
+    from ..testing import assert_clean
+    from ..workloads.registry import get_workload
+
+    devs = jax.devices()
+    if len(devs) < args.devices:
+        raise SystemExit(
+            f"{len(devs)} devices visible, need {args.devices} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{args.devices}")
+    mesh = Mesh(np.array(devs[:args.devices]), (AXIS,))
+
+    model = get_workload(args.workload, n_objects=args.objects,
+                         lookahead=args.lookahead, dist=args.dist,
+                         **parse_kv(args.model_kw))
     cfg = EngineConfig(
-        lookahead=args.lookahead, epoch_len=args.epoch_len, n_buckets=16,
-        bucket_cap=max(64, 4 * args.initial), route_cap=8192,
-        fallback_cap=8192, scheduler=args.scheduler, route=args.route,
+        lookahead=args.lookahead, epoch_len=args.epoch_len,
+        n_buckets=args.n_buckets, bucket_cap=args.bucket_cap,
+        route_cap=args.route_cap, fallback_cap=args.fallback_cap,
+        scheduler=args.scheduler, route=args.route,
+        batch_impl=args.batch_impl, pack_tile=args.pack_tile,
         steal=args.steal, steal_cap=4, claim_cap=8,
-        batch_impl=args.batch_impl)
-    eng = ParsirEngine(model, cfg)
+        placement=args.placement, rebalance_every=args.rebalance_every,
+        migrate_cap=args.migrate_cap, placement_slack=args.placement_slack)
+    eng = ParsirEngine(model, cfg, mesh=mesh)
 
     st = eng.init()
-    st = eng.run(st, 5)  # warm/compile
+    # warm/compile the exact program the timed section dispatches, without
+    # advancing the simulation: both loops no-op at a zero bound.
+    st = (eng.run_until_drained(st, 0) if args.drain else eng.run(st, 0))
     base = eng.totals(st)["processed"]
+
     t0 = time.perf_counter()
-    st = eng.run(st, args.epochs)
+    st = (eng.run_until_drained(st, args.epochs) if args.drain
+          else eng.run(st, args.epochs))
     st.stats.processed.block_until_ready()
     dt = time.perf_counter() - t0
+
     tot = eng.totals(st)
-    print(f"[simulate] {tot['processed'] - base} events in {dt:.2f}s "
-          f"({(tot['processed'] - base) / dt:,.0f} ev/s)")
+    epochs_run = int(np.asarray(st.epoch)[0])
+    done = tot["processed"] - base
+    print(f"[simulate] {args.workload} D={args.devices}: {done} events over "
+          f"{epochs_run} epochs in {dt:.2f}s ({done / max(dt, 1e-9):,.0f} "
+          f"ev/s) — {eng.dispatches} host dispatches")
+    if args.drain:
+        left = eng.in_flight(st)
+        print(f"[simulate] drain: {'complete' if left == 0 else 'BOUND HIT'} "
+              f"at epoch {epochs_run} (in-flight {left})")
     print(f"[simulate] stats: {tot}")
-    bad = (tot["cal_overflow"] or tot["late_events"]
-           or tot["lookahead_violations"] or tot["route_overflow"])
-    if bad:
-        raise SystemExit("[simulate] CAPACITY/CAUSALITY VIOLATION — resize "
-                         "bucket/route/fallback caps")
+    try:
+        assert_clean(tot, context="simulate")
+    except AssertionError as e:
+        raise SystemExit(f"[simulate] {e}") from None
 
     if args.verify:
         if args.dist != "dyadic":
             raise SystemExit("--verify needs --dist dyadic (bit-exact mode)")
         from ..core.ref_engine import run_sequential
-        import numpy as np
-        ref = run_sequential(model, args.epochs + 5, cfg.epoch_len)
-        assert tot["processed"] == ref.total_processed
-        pay = np.asarray(st.obj["payload"])
-        ref_pay = np.stack([s["payload"] for s in ref.obj_state])
-        assert np.array_equal(pay, ref_pay)
+        ref = run_sequential(model, epochs_run, cfg.epoch_len)
+        assert tot["processed"] == ref.total_processed, \
+            (tot["processed"], ref.total_processed)
+        gobj = eng.global_object_state(st)
+        for key, leaf in gobj.items():
+            ref_leaf = np.stack([s[key] for s in ref.obj_state])
+            assert np.array_equal(leaf, ref_leaf), \
+                f"object state {key!r} diverges from the oracle"
         print("[simulate] verified bit-exact vs sequential oracle ✓")
 
 

@@ -1,1 +1,9 @@
-"""Reusable test harnesses (differential conformance against the oracle)."""
+"""Reusable test harnesses (differential conformance against the oracle)
+and the drivers' shared "clean run" contract (:mod:`repro.testing.clean`).
+
+This package ``__init__`` must stay importable without jax/numpy — the CI
+docs job runs :mod:`repro.testing.docs_check` in a bare environment.
+"""
+from .clean import CLEAN_COUNTERS, assert_clean, unclean_counters  # noqa: F401
+
+__all__ = ["CLEAN_COUNTERS", "assert_clean", "unclean_counters"]

@@ -5,7 +5,9 @@ against the sequential numpy oracle (:mod:`repro.core.ref_engine`) in four
 parts:
 
   1. **clean counters** — every overflow/causality/lookahead counter in
-     ``Stats`` is zero (a conservative engine never silently drops/reorders);
+     ``Stats`` is zero (a conservative engine never silently drops/reorders;
+     the checker is the shared :func:`repro.testing.assert_clean`, the same
+     contract the CLI drivers enforce);
   2. **processed count** — equals the oracle's;
   3. **pending multiset** — the (dst, seed) multiset still parked in the
      calendar + fallback equals the oracle's final event heap.  Because all
@@ -33,7 +35,11 @@ first JAX init, so multi-device sweeps run in a subprocess)::
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
     python -m repro.testing.conformance --workload queueing --devices 4 \\
-        --configs batch-a2a,steal-allgather,steal-a2a
+        --configs batch-a2a,steal-allgather,steal-a2a [--drain]
+
+``--drain`` swaps the host-chunked ``run`` for the fused on-device drain
+loop (:meth:`ParsirEngine.run_until_drained`) under identical assertions —
+the equivalence face of the fused loop, sweepable across every config axis.
 """
 from __future__ import annotations
 
@@ -45,6 +51,7 @@ import numpy as np
 from ..core.engine import EngineConfig, ParsirEngine
 from ..core.ref_engine import SequentialResult, run_sequential
 from ..workloads.registry import all_workloads, conformance_spec, get_workload
+from .clean import assert_clean
 
 #: named engine-config points of the conformance sweep.  Values are
 #: EngineConfig overrides; the two pseudo-keys are handled by the harness:
@@ -137,12 +144,19 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
                     engine_kw: dict | None = None, mesh=None,
                     dyadic: bool = True,
                     ref: SequentialResult | None = None,
-                    label: str = "") -> dict:
+                    label: str = "", drain: bool = False) -> dict:
     """Run ``model`` through the engine under ``overrides`` and assert full
     agreement with the sequential oracle.  Returns a report dict (totals,
     pending count, the oracle result for reuse).  ``label`` (e.g.
     ``"phold/batch-packed"``) prefixes every failure message alongside the
-    resolved config axes, so a sweep failure names its diverging point."""
+    resolved config axes, so a sweep failure names its diverging point.
+
+    ``drain=True`` runs the horizon through the fused on-device drain loop
+    (:meth:`ParsirEngine.run_until_drained` bounded by ``n_epochs``) instead
+    of the host-chunked ``run`` — every assertion is unchanged, because a
+    drained state is a fixpoint of the step: stopping early at the drain
+    epoch leaves exactly the state (and stats) the full horizon would, and
+    a non-draining workload runs the identical ``n_epochs`` epochs."""
     overrides = dict(overrides)
     lookahead = model.params.lookahead
     frac = overrides.pop("epoch_len_frac", None)
@@ -156,13 +170,11 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
 
     eng = ParsirEngine(model, cfg, mesh=mesh)
     ctx = f"[{label + ': ' if label else ''}{axes_of(cfg, eng.D)}]"
-    st = eng.run(eng.init(), n_epochs)
+    st = (eng.run_until_drained(eng.init(), n_epochs) if drain
+          else eng.run(eng.init(), n_epochs))
     tot = eng.totals(st)
 
-    for counter in ("cal_overflow", "fb_overflow", "route_overflow",
-                    "late_events", "lookahead_violations", "oob_events"):
-        assert tot[counter] == 0, \
-            f"{ctx} {counter}={tot[counter]} (must be 0): {tot}"
+    assert_clean(tot, context=ctx)
     if cfg.placement == "adaptive":
         # per-device counters: every device reports each firing, so the sum
         # is (firings × D) — nonzero iff the stage actually ran.
@@ -196,7 +208,8 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
 def check_workload(name: str, config: str, *, mesh=None,
                    ref_cache: dict | None = None,
                    model_overrides: dict | None = None,
-                   engine_overrides: dict | None = None) -> dict:
+                   engine_overrides: dict | None = None,
+                   drain: bool = False) -> dict:
     """Conformance-check a registered workload under a named SWEEP config."""
     spec = conformance_spec(name)
     overrides = dict(SWEEP[config])
@@ -219,7 +232,7 @@ def check_workload(name: str, config: str, *, mesh=None,
     report = run_conformance(model, overrides, n_epochs=spec["n_epochs"],
                              engine_kw=engine_kw, mesh=mesh,
                              dyadic=spec["dyadic"], ref=ref,
-                             label=f"{name}/{config}")
+                             label=f"{name}/{config}", drain=drain)
     if ref_cache is not None:
         ref_cache[key] = report["ref"]
     return report
@@ -240,6 +253,11 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-rebalances", type=int, default=0, metavar="N",
                     help="assert every adaptive config fired the rebalance "
                          "stage at least N times")
+    ap.add_argument("--drain", action="store_true",
+                    help="run each config through the fused on-device drain "
+                         "loop (run_until_drained bounded by the workload's "
+                         "n_epochs) instead of host-chunked run — same "
+                         "assertions, one XLA dispatch")
     args = ap.parse_args(argv)
 
     import jax
@@ -266,7 +284,7 @@ def main(argv=None) -> int:
             print(f"SKIP {args.workload} {config} (no process_batch)")
             continue
         report = check_workload(args.workload, config, mesh=mesh,
-                                ref_cache=ref_cache)
+                                ref_cache=ref_cache, drain=args.drain)
         tot = report["totals"]
         if SWEEP[config].get("steal"):
             stolen += tot["stolen"]

@@ -13,12 +13,19 @@ oracle runs, sub-second):
      entry is enforced by tests/test_golden.py, which runs the oracle);
   3. ``docs/writing-a-workload.md`` (the tutorial whose steps, followed
      literally, reproduce a registration) mentions every registry id's
-     module-level contract hooks.
+     module-level contract hooks;
+  4. the CLI driver (``repro.launch.simulate``) exposes every orchestration
+     axis and sources each choice-typed flag from the sanctioned registry
+     symbol (``all_workloads()``, the :mod:`repro.core.pipeline.names`
+     truth sets) — a hardcoded choices list is how the driver rotted to
+     phold-only while five more workloads shipped.
 
 Deliberately stdlib-only (plus the pure-python registry module): the CI
 docs job runs it with no installed dependencies, so nothing here may
 import numpy/jax — the golden JSON is read from disk, never through
-:mod:`repro.testing.golden`.
+:mod:`repro.testing.golden`; ``names.py`` is loaded by *file path* (its
+package ``__init__`` imports jax) and ``simulate.py`` is AST-parsed, never
+imported.
 
 CLI (the CI docs job)::
 
@@ -114,9 +121,91 @@ def check_tutorial(repo_root: str = REPO_ROOT) -> list[str]:
             for hook in TUTORIAL_HOOKS if hook not in text]
 
 
+#: choice-typed simulate.py flag → the sanctioned symbol its ``choices=``
+#: expression must reference (registry truth, never a hardcoded list).
+SIMULATE_CHOICE_SOURCES = {
+    "--workload": "all_workloads",
+    "--scheduler": "SELECTABLE_SCHEDULERS",
+    "--route": "ROUTES",
+    "--batch-impl": "BATCH_IMPLS",
+    "--placement": "PLACEMENTS",
+}
+
+#: every orchestration axis the CLI driver must expose.
+SIMULATE_REQUIRED_FLAGS = tuple(SIMULATE_CHOICE_SOURCES) + (
+    "--devices", "--rebalance-every", "--model-kw", "--steal", "--drain",
+    "--verify")
+
+
+def _load_stage_names(repo_root: str):
+    """``repro.core.pipeline.names`` loaded by file path — the package
+    ``__init__`` imports jax, which the CI docs job doesn't have."""
+    import importlib.util
+    path = os.path.join(repo_root, "src", "repro", "core", "pipeline",
+                        "names.py")
+    spec = importlib.util.spec_from_file_location("_parsir_stage_names", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
+    import ast
+    path = os.path.join(repo_root, "src", "repro", "launch", "simulate.py")
+    with open(path) as f:
+        tree = ast.parse(f.read())
+    flags: dict[str, ast.expr | None] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"
+                and node.args and isinstance(node.args[0], ast.Constant)):
+            choices = next((kw.value for kw in node.keywords
+                            if kw.arg == "choices"), None)
+            flags[node.args[0].value] = choices
+
+    problems = []
+    for flag in SIMULATE_REQUIRED_FLAGS:
+        if flag not in flags:
+            problems.append(
+                f"repro/launch/simulate.py exposes no `{flag}` — the CLI "
+                f"driver must cover every orchestration axis the engine has")
+
+    names = _load_stage_names(repo_root)
+    truth = {"--workload": set(all_workloads()),
+             "--scheduler": set(names.SELECTABLE_SCHEDULERS),
+             "--route": set(names.ROUTES),
+             "--batch-impl": set(names.BATCH_IMPLS),
+             "--placement": set(names.PLACEMENTS)}
+    for flag, symbol in SIMULATE_CHOICE_SOURCES.items():
+        if flag not in flags:
+            continue  # already reported above
+        choices = flags[flag]
+        if choices is None:
+            problems.append(f"simulate.py `{flag}` has no choices= — drive "
+                            f"it from `{symbol}`")
+            continue
+        referenced = {n.id for n in ast.walk(choices)
+                      if isinstance(n, ast.Name)}
+        referenced |= {n.attr for n in ast.walk(choices)
+                       if isinstance(n, ast.Attribute)}
+        if symbol in referenced:
+            continue
+        try:  # a literal list is tolerable only if it matches truth exactly
+            literal = set(ast.literal_eval(choices))
+        except (ValueError, SyntaxError):
+            literal = None
+        if literal != truth[flag]:
+            problems.append(
+                f"simulate.py `{flag}` choices are not sourced from "
+                f"`{symbol}` (and don't literal-match it) — hardcoded "
+                f"choice lists rot as registries grow")
+    return problems
+
+
 def run_all(repo_root: str = REPO_ROOT) -> list[str]:
     return (check_readme_table(repo_root) + check_golden_coverage(repo_root)
-            + check_tutorial(repo_root))
+            + check_tutorial(repo_root) + check_simulate_cli(repo_root))
 
 
 def main(argv=None) -> int:

@@ -21,6 +21,34 @@ def test_writing_a_workload_tutorial_is_complete():
     assert docs_check.check_tutorial() == []
 
 
+def test_simulate_cli_is_registry_driven():
+    assert docs_check.check_simulate_cli() == []
+
+
+def test_simulate_cli_check_catches_hardcoded_choices(tmp_path):
+    # a driver that hardcodes a stale choices list (the exact phold-only rot
+    # this check retires) must be flagged; a missing axis flag too.
+    launch = tmp_path / "src" / "repro" / "launch"
+    launch.mkdir(parents=True)
+    names_dir = tmp_path / "src" / "repro" / "core" / "pipeline"
+    names_dir.mkdir(parents=True)
+    real_names = docs_check.os.path.join(
+        docs_check.REPO_ROOT, "src", "repro", "core", "pipeline", "names.py")
+    (names_dir / "names.py").write_text(open(real_names).read())
+    (launch / "simulate.py").write_text(
+        'import argparse\n'
+        'ap = argparse.ArgumentParser()\n'
+        'ap.add_argument("--workload", choices=["phold"])\n'
+        'ap.add_argument("--route", choices=["allgather", "a2a"])\n')
+    problems = docs_check.check_simulate_cli(str(tmp_path))
+    # --workload: stale literal list; --route: literal but matches truth →
+    # tolerated; every other required flag: missing.
+    assert any("--workload" in p and "sourced" in p for p in problems)
+    assert not any("`--route` choices" in p for p in problems)
+    missing = len(docs_check.SIMULATE_REQUIRED_FLAGS) - 2
+    assert sum("exposes no" in p for p in problems) == missing
+
+
 def test_cli_exit_status_counts_problems(tmp_path):
     # a repo root with an empty README and no docs/ must fail loudly, with
     # one problem per missing artifact, not crash.

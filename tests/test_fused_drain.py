@@ -1,0 +1,156 @@
+"""The fused on-device loops (engine.run / engine.run_until_drained).
+
+`run` advances a traced epoch count through one compiled ``fori_loop``
+program (no per-length retrace); `run_until_drained` fuses an entire
+drain-to-empty simulation — step, drain predicate, stats — into a single
+``lax.while_loop`` dispatch with donated buffers.  Pinned here:
+
+* equivalence: for every registered workload, the fused drive lands on the
+  host-chunked drive's exact bits (state leaf by leaf, identical Stats) —
+  the drained state is a step fixpoint, so an early while_loop exit and the
+  full fixed horizon agree;
+* the ``max_epochs`` bound: a never-draining workload runs exactly the
+  bound, epoch counter included;
+* a whole draining simulation really is ONE dispatch, bit-exact against the
+  sequential oracle at the epoch the predicate fired;
+* donation: the input state's buffers are consumed (is_deleted), so chained
+  ``st = eng.run...(st, ...)`` rebinds never double-buffer;
+* no per-length retrace: three different epoch counts, one compiled program.
+
+The D=4 face of the same equivalence runs through the conformance
+subprocess driver's ``--drain`` flag (multi-device while_loop + collectives
+in the body).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, ParsirEngine
+from repro.core.ref_engine import run_sequential
+from repro.testing import assert_clean
+from repro.workloads.registry import (all_workloads, conformance_spec,
+                                      get_workload)
+
+
+def _build(workload):
+    spec = conformance_spec(workload)
+    model = get_workload(workload, **spec["model_kw"])
+    cfg = EngineConfig(lookahead=model.params.lookahead, **spec["engine_kw"])
+    return ParsirEngine(model, cfg), spec
+
+
+def _assert_states_equal(a, b, *, include_epoch, ctx=""):
+    for field in a._fields:
+        if field == "epoch" and not include_epoch:
+            continue
+        la, lb = (jax.tree.leaves(getattr(s, field)) for s in (a, b))
+        assert len(la) == len(lb), (ctx, field)
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"{ctx} state leaf [{field}] diverges")
+
+
+@pytest.mark.parametrize("workload", all_workloads())
+def test_fused_drain_equals_host_chunked(workload):
+    eng, spec = _build(workload)
+    n = spec["n_epochs"]
+    a = eng.run(eng.init(), n)
+    d0 = eng.dispatches
+    b = eng.run_until_drained(eng.init(), n)
+    assert eng.dispatches - d0 == 2  # init + the one fused dispatch
+
+    assert eng.totals(a) == eng.totals(b)
+    drained = eng.in_flight(b) == 0
+    # a draining workload may exit the while_loop early; every leaf except
+    # the epoch counter must still match (drained state is a step fixpoint).
+    _assert_states_equal(a, b, include_epoch=not drained, ctx=workload)
+    assert int(np.asarray(b.epoch)[0]) <= n
+
+
+def test_max_epochs_bound_runs_exactly_the_bound():
+    # classic PHOLD conserves its event population — the predicate never
+    # fires, so the fused loop is `run` exactly, epoch counter included.
+    eng, _ = _build("phold")
+    a = eng.run(eng.init(), 5)
+    b = eng.run_until_drained(eng.init(), 5)
+    assert eng.in_flight(b) > 0
+    assert int(np.asarray(b.epoch)[0]) == 5
+    _assert_states_equal(a, b, include_epoch=True, ctx="phold/bound")
+
+
+def test_whole_drain_simulation_is_one_dispatch_and_oracle_exact():
+    # acceptance rung: finite arrival budgets + no handoffs → the network
+    # empties; init-to-empty is a single XLA program launch, bit-identical
+    # to the sequential oracle at the drain epoch.
+    model = get_workload("wireless", n_cells=6, n_channels=2, max_calls=3,
+                         handoff_p=0, lookahead=0.5, dist="dyadic")
+    cfg = EngineConfig(lookahead=0.5, n_buckets=8, bucket_cap=64,
+                       route_cap=512, fallback_cap=512)
+    eng = ParsirEngine(model, cfg)
+    st = eng.init()
+    d0 = eng.dispatches
+    st = eng.run_until_drained(st, 200)
+    assert eng.dispatches - d0 == 1
+    assert eng.in_flight(st) == 0
+    epochs = int(np.asarray(st.epoch)[0])
+    assert 0 < epochs < 200  # the predicate fired, not the bound
+    tot = eng.totals(st)
+    assert_clean(tot, context="fused drain")
+
+    ref = run_sequential(model, epochs, cfg.epoch_len)
+    assert tot["processed"] == ref.total_processed
+    gobj = eng.global_object_state(st)
+    for k in ref.obj_state[0]:
+        want = np.stack([np.asarray(s[k]) for s in ref.obj_state])
+        np.testing.assert_array_equal(gobj[k], want,
+                                      err_msg=f"object state [{k}]")
+
+
+def test_fused_loops_donate_their_input():
+    # both on-device loops take the state by donation: after the call the
+    # input handle's buffers are consumed, so a chunked inspection loop
+    # (`st = eng.run(st, k)` repeatedly) never holds two live states.
+    eng, _ = _build("phold")
+    st0 = eng.init()
+    probe = st0.cal.cnt
+    st1 = eng.run(st0, 3)
+    assert probe.is_deleted()
+    probe = st1.cal.cnt
+    st2 = eng.run_until_drained(st1, 3)
+    assert probe.is_deleted()
+    assert not st2.cal.cnt.is_deleted()
+
+
+def test_run_compiles_once_for_any_epoch_count():
+    eng, _ = _build("phold")
+    st = eng.init()
+    for n in (1, 2, 7):
+        st = eng.run(st, n)
+    assert int(np.asarray(st.epoch)[0]) == 10
+    if hasattr(eng._run_sm, "_cache_size"):
+        # the epoch count is a traced operand — three lengths, one program
+        # (the retired implementation retraced per distinct n_epochs).
+        assert eng._run_sm._cache_size() == 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("workload", all_workloads())
+def test_fused_drain_conformance_multidevice(workload):
+    # D=4: the while_loop body contains real collectives (a2a exchange,
+    # psum'd drain predicate); the full conformance assertions run against
+    # the fused drive via the harness's --drain flag.
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    cmd = [sys.executable, "-m", "repro.testing.conformance",
+           "--workload", workload, "--devices", "4",
+           "--configs", "batch-a2a", "--drain"]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "CONFORMANCE PASS" in r.stdout

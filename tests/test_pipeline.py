@@ -42,6 +42,27 @@ def test_builtin_stages_registered():
     assert {"none", "loan"} <= set(STEAL_POLICIES)
 
 
+def test_stage_name_truth_sets_track_registries():
+    # repro.core.pipeline.names is the jax-free single source the CLI driver
+    # and the stdlib-only docs checker consume — every declared name must
+    # resolve in the live registries (registries may additionally hold
+    # user-registered stages, so these are subset checks), and the internal
+    # batch-family scheduler names must stay out of the selectable set.
+    from repro.core.pipeline import base, names
+    assert base.BATCH_IMPLS is names.BATCH_IMPLS
+    assert set(names.ROUTES) <= set(ROUTERS)
+    assert {"allgather", "a2a"} <= set(names.ROUTES)
+    assert set(names.BATCH_IMPLS) == {"rounds", "packed", "model"}
+    assert set(names.BATCH_IMPLS.values()) <= set(SCHEDULERS)
+    internal = set(names.BATCH_IMPLS.values()) - {"batch"}
+    assert not internal & set(names.SELECTABLE_SCHEDULERS)
+    for s in names.SELECTABLE_SCHEDULERS:
+        assert s in SCHEDULERS, s
+    for p in names.PLACEMENTS:  # every declared placement is constructible
+        kw = dict(rebalance_every=4) if p == "adaptive" else {}
+        EngineConfig(lookahead=0.5, placement=p, **kw)
+
+
 @pytest.mark.parametrize("bad_kw", [dict(route="bogus"),
                                     dict(scheduler="bogus"),
                                     dict(batch_impl="bogus"),

@@ -143,6 +143,77 @@ def test_oob_initial_events_counted_at_ingest():
     assert eng.in_flight(st) == 7             # the corrupt event never lands
 
 
+_DELIVER_OOB_CHILD = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.calendar import make_calendar, make_fallback
+from repro.core.engine import AXIS, EngineConfig, _shard_map
+from repro.core.events import EventBatch
+from repro.core.pipeline.base import resolve_router
+from repro.core.pipeline.deliver import deliver
+from repro.core.placement import equal_placement
+
+D, O = 4, 16
+cfg = EngineConfig(lookahead=0.5, n_buckets=8, bucket_cap=16, route_cap=64,
+                   fallback_cap=16, route="a2a")
+pl = equal_placement(O, D)
+router = resolve_router("a2a")
+pair_cap = cfg.route_cap // D
+
+# hand-crafted per-device a2a route buffers [D, D * pair_cap]: device 0
+# writes one corrupt dst (O + 5) into its peer-2 sub-buffer, so after the
+# all_to_all it arrives ONLY on device 2 — a per-device-distinct batch.
+dst = np.zeros((D, D * pair_cap), np.int32)
+ts = np.full((D, D * pair_cap), np.inf, np.float32)
+seed = np.zeros((D, D * pair_cap), np.uint32)
+pay = np.zeros((D, D * pair_cap), np.float32)
+valid = np.zeros((D, D * pair_cap), bool)
+slot = 2 * pair_cap
+dst[0, slot], ts[0, slot], valid[0, slot] = O + 5, 1.25, True
+
+mesh = Mesh(np.array(jax.devices()[:D]), (AXIS,))
+M = pl.n_local_max
+cal = make_calendar(D * M, cfg.n_buckets, cfg.bucket_cap)
+fb = make_fallback(D * cfg.fallback_cap)
+buf = EventBatch(dst=jnp.asarray(dst.reshape(-1)),
+                 ts=jnp.asarray(ts.reshape(-1)),
+                 seed=jnp.asarray(seed.reshape(-1)),
+                 payload=jnp.asarray(pay.reshape(-1)),
+                 valid=jnp.asarray(valid.reshape(-1)))
+
+def f(cal, fb, buf):
+    dev = jax.lax.axis_index(AXIS)
+    routed = router.exchange(buf, pl, cfg)
+    cal, fb, cal_ovf, fb_ovf, late, n_oob = deliver(
+        cal, fb, routed, jnp.int32(0), dev, pl, cfg, init=False,
+        replicated=router.replicated)
+    return n_oob[None]
+
+spec = P(AXIS)
+per_dev = jax.jit(_shard_map(f, mesh, (spec, spec, spec), spec))(cal, fb, buf)
+per_dev = np.asarray(per_dev)
+# the count lands on the device the corrupt event was routed TO — with the
+# retired device-0-only reduction this was [0, 0, 0, 0].
+assert per_dev.tolist() == [0, 0, 1, 0], per_dev
+print("DELIVER_OOB_OK")
+"""
+
+
+@pytest.mark.slow
+def test_a2a_deliver_counts_oob_on_the_receiving_device():
+    # negative path of the replication-aware oob reduction: a corrupt dst
+    # injected through the real a2a exchange must be counted on the device
+    # it lands on (deliver once counted oob only on device 0, undercounting
+    # every a2a slice received by devices 1..D-1).
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _DELIVER_OOB_CHILD], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "DELIVER_OOB_OK" in r.stdout
+
+
 # ---------------------------------------------------------------------------
 # adaptive boundary recomputation: feasibility invariants
 # ---------------------------------------------------------------------------

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core.engine import EngineConfig, ParsirEngine
-from repro.testing import conformance as cf
+from repro.testing import assert_clean, conformance as cf
 from repro.workloads.registry import get_workload
 
 N_EPOCHS = 24
@@ -35,14 +35,6 @@ def run_engine(model, n_epochs, **cfg_kw):
     eng = ParsirEngine(model, EngineConfig(**defaults))
     st = eng.run(eng.init(), n_epochs)
     return eng, st
-
-
-def assert_clean(tot):
-    assert tot["cal_overflow"] == 0
-    assert tot["fb_overflow"] == 0
-    assert tot["route_overflow"] == 0
-    assert tot["late_events"] == 0
-    assert tot["lookahead_violations"] == 0
 
 
 @pytest.mark.parametrize("config",

@@ -103,9 +103,10 @@ def test_exhausted_generators_drain_the_network():
     model = get_workload("wireless", n_cells=6, n_channels=2, max_calls=3,
                          handoff_p=0, lookahead=0.5, dist="dyadic")
     eng = _engine(model)
-    st = eng.run(eng.init(), 64)
+    st = eng.run_until_drained(eng.init(), 96)
     tot = eng.totals(st)
     assert eng.in_flight(st) == 0
+    assert int(np.asarray(st.epoch)[0]) < 96  # drain predicate fired, not bound
     obj = {k: np.asarray(v) for k, v in st.obj.items()}
     np.testing.assert_array_equal(obj["arrivals"], np.full(6, 3))
     np.testing.assert_array_equal(obj["calls"] + obj["blocked"],
