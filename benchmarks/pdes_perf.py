@@ -12,9 +12,20 @@ perf trajectory covers skewed traffic (phold-hotspot), FIFO-coupled traffic
 The ``it4_fused_drain`` rung measures *dispatches-per-simulation* — the same
 window driven one-host-dispatch-per-epoch, in fixed fused chunks, and as one
 ``lax.while_loop`` dispatch (``run_until_drained``; must report exactly 1).
+The ``it5_campaign`` rung (wireless) measures *dispatches-per-campaign*:
+32 replication seeds of the draining simulation run one-fused-drain-per-seed
+vs all 32 stacked through the replication-vmapped while_loop (must report
+exactly 1 dispatch for the whole sweep).  When the seed count divides the
+device count the stacked drive runs replication-*sharded* (``rep_shards``:
+each replication collective-free on its own device, capacities right-sized
+to one replication's traffic via ``rep_engine_kw``) — the layout that wins
+at campaign scale.
 Any rung whose run is unclean (nonzero overflow/causality counter, the full
 :mod:`repro.testing.clean` set) fails the driver with a nonzero exit —
-a perf number from a run that dropped events is not a result.
+a perf number from a run that dropped events is not a result.  Draining
+rungs (``expect_drained``) additionally fail if they hit their epoch bound
+with events still in flight: ev/s from a simulation that never finished is
+not a result either.
 
   PYTHONPATH=src python -m benchmarks.pdes_perf [--devices 8]
   PYTHONPATH=src python -m benchmarks.pdes_perf --workload phold-hotspot
@@ -60,21 +71,120 @@ _CHILD = textwrap.dedent("""
             raise
         raise SystemExit(f"bad model_kw for workload {wname!r}: {e} "
                          f"(keys: {sorted(model_kw)})")
-    cfg = EngineConfig(lookahead=spec["la"],
-                       epoch_len=spec.get("epoch_len"),
-                       n_buckets=32, bucket_cap=spec.get("bucket_cap", 256),
-                       route_cap=spec["route_cap"], fallback_cap=16384,
-                       route=spec["route"], scheduler=spec.get("sched","batch"),
-                       steal=spec.get("steal", False), steal_cap=8,
-                       claim_cap=16,
-                       batch_impl=spec.get("batch_impl", "rounds"),
-                       pack_tile=spec.get("pack_tile", 64),
-                       placement=spec.get("placement", "equal"),
-                       rebalance_every=spec.get("rebalance_every", 0),
-                       migrate_cap=spec.get("migrate_cap", 16),
-                       placement_slack=spec.get("placement_slack", 2.0))
+    ckw = dict(lookahead=spec["la"],
+               epoch_len=spec.get("epoch_len"),
+               n_buckets=32, bucket_cap=spec.get("bucket_cap", 256),
+               route_cap=spec["route_cap"], fallback_cap=16384,
+               route=spec["route"], scheduler=spec.get("sched", "batch"),
+               steal=spec.get("steal", False), steal_cap=8,
+               claim_cap=16,
+               batch_impl=spec.get("batch_impl", "rounds"),
+               pack_tile=spec.get("pack_tile", 64),
+               placement=spec.get("placement", "equal"),
+               rebalance_every=spec.get("rebalance_every", 0),
+               migrate_cap=spec.get("migrate_cap", 16),
+               placement_slack=spec.get("placement_slack", 2.0))
+    cfg = EngineConfig(**ckw)
     eng = ParsirEngine(model, cfg, mesh=mesh)
     from repro.testing import unclean_counters
+
+    if spec.get("campaign"):
+        # campaign rung: R replication seeds of the SAME draining simulation,
+        # driven (a) one fused drain per seed (the PR6 state of the art) and
+        # (b) all R stacked through ONE replication-vmapped while_loop
+        # (run_replicated_drained).  dispatches-per-campaign is the honest
+        # metric — the vmapped drive must hit exactly 1 — and per-seed
+        # processed totals must agree across drives (each replication is
+        # leaf-exact vs its own independent drain by construction).
+        # Execution layout for the stacked drive: when the campaign has more
+        # replications than devices, shard the REPLICATION axis instead of
+        # the object axis (rep_shards=D on a single-device engine mesh) —
+        # each replication runs collective-free on its own device, which
+        # beats D-way object sharding whenever one replication fits a
+        # device (the a2a/allgather sync per epoch costs more than the
+        # whole single-device step at these object counts).
+        # The rep-sharded engine also right-sizes its static capacities to
+        # ONE replication's traffic (spec key rep_engine_kw; the ladder's
+        # caps are sized for 4-way object-sharded device traffic and their
+        # slack is pure per-epoch fixed cost — the extract sort alone walks
+        # bucket_cap slots per object per epoch).  Any under-sizing trips
+        # the overflow counters and fails the rung, and the per-seed
+        # processed-equality assert below holds both drives to identical
+        # event flow.
+        E, R = spec["epochs"], spec["reps"]
+        seeds = list(range(R))
+        rep_kw = spec.get("rep_engine_kw", {})
+        if D > 1 and R % D == 0:
+            eng_v = ParsirEngine(model, EngineConfig(**dict(ckw, **rep_kw)),
+                                 mesh=Mesh(np.array(jax.devices()[:1]),
+                                           (AXIS,)),
+                                 rep_shards=D)
+        else:
+            eng_v = eng
+
+        def drive(mode):
+            if mode == "host_loop":
+                per, infl, disp, dt, bad, epochs = [], 0, 0, 0.0, {}, 0
+                for s in seeds:
+                    st = eng.init(seed=s)
+                    d0 = eng.dispatches
+                    t0 = time.perf_counter()
+                    st = eng.run_until_drained(st, E)
+                    jax.block_until_ready(st)
+                    dt += time.perf_counter() - t0
+                    disp += eng.dispatches - d0
+                    tot = eng.totals(st)
+                    per.append(tot["processed"])
+                    infl += eng.in_flight(st)
+                    epochs = max(epochs, int(np.asarray(st.epoch)[0]))
+                    for k, v in unclean_counters(tot).items():
+                        bad[k] = bad.get(k, 0) + v
+                return per, infl, disp, dt, bad, epochs
+            st = eng_v.init_replicated(seeds)
+            d0 = eng_v.dispatches
+            t0 = time.perf_counter()
+            st = eng_v.run_replicated_drained(st, E)
+            jax.block_until_ready(st)
+            dt = time.perf_counter() - t0
+            disp = eng_v.dispatches - d0
+            totr = eng_v.totals_replicated(st)
+            per = [t["processed"] for t in totr]
+            infl = int(eng_v.in_flight_replicated(st).sum())
+            bad = {}
+            for t in totr:
+                for k, v in unclean_counters(t).items():
+                    bad[k] = bad.get(k, 0) + v
+            epochs = int(np.asarray(st.epoch)[:, 0].max())
+            return per, infl, disp, dt, bad, epochs
+
+        modes, per_seed, unclean, infl_total = {}, {}, {}, 0
+        epochs_run = 0
+        for mode in ("host_loop", "vmapped"):
+            drive(mode)                                   # compile pass
+            per, infl, disp, dt, bad, epochs = drive(mode)
+            per_seed[mode] = per
+            unclean.update(bad)
+            infl_total += infl
+            epochs_run = max(epochs_run, epochs)
+            modes[mode] = {"dispatches_per_campaign": disp, "dt": dt,
+                           "ev_s": sum(per) / dt}
+        assert per_seed["host_loop"] == per_seed["vmapped"], \
+            f"drives diverged per seed: {per_seed}"
+        assert modes["vmapped"]["dispatches_per_campaign"] == 1, modes
+        drained = infl_total == 0
+        print(json.dumps({"ev_s": modes["vmapped"]["ev_s"],
+                          "n": sum(per_seed["vmapped"]),
+                          "replications": R,
+                          "rep_shards": eng_v.rep_shards,
+                          "rep_engine_kw": rep_kw,
+                          "per_seed": per_seed["vmapped"],
+                          "speedup_vs_host_loop":
+                              modes["vmapped"]["ev_s"]
+                              / modes["host_loop"]["ev_s"],
+                          "modes": modes, "unclean": unclean,
+                          "drained": drained, "bound_hit": not drained,
+                          "epochs_run": epochs_run}))
+        raise SystemExit(0)
 
     if spec.get("fused_drain"):
         # dispatch-ladder rung: the same simulation window driven three ways
@@ -112,10 +222,11 @@ _CHILD = textwrap.dedent("""
             f"drive modes diverged: {processed}"
         assert modes["fused_drain"]["dispatches_per_simulation"] == 1, modes
         tot["rebalances"] //= D
+        drained = eng.in_flight(st) == 0
         print(json.dumps({"ev_s": modes["fused_drain"]["ev_s"],
                           "n": processed["fused_drain"], "stats": tot,
                           "unclean": unclean_counters(tot), "modes": modes,
-                          "drained": eng.in_flight(st) == 0,
+                          "drained": drained, "bound_hit": not drained,
                           "epochs_run": int(np.asarray(st.epoch)[0])}))
         raise SystemExit(0)
 
@@ -265,7 +376,19 @@ def build_ladder(workload: str):
         # stepped drive pays one dispatch per epoch of the same window.
         ladder.append(("it4_drain_budget",
                        dict(route="a2a", fused_drain=True, epochs=256,
+                            expect_drained=True,
                             model_kw=dict(max_calls=4))))
+        # the campaign rung (PR 7): 32 replication seeds of the draining
+        # simulation above, run (a) one fused drain per seed and (b) all 32
+        # stacked through ONE replication-vmapped while_loop — the whole
+        # sweep in a single XLA dispatch.  `epochs` is the drain *bound*, not
+        # a window: every replication must actually drain (expect_drained).
+        ladder.append(("it5_campaign",
+                       dict(route="a2a", campaign=True, reps=32, epochs=256,
+                            expect_drained=True,
+                            model_kw=dict(max_calls=4),
+                            rep_engine_kw=dict(bucket_cap=64, route_cap=2048,
+                                               fallback_cap=4096))))
     ladder.append(("ltf_reference_scheduler",
                    dict(route="a2a", sched="ltf", epochs=10, warm=2)))
     return ladder
@@ -277,7 +400,18 @@ SMOKE = dict(o=64, m=8, s=64, epochs=6, warm=2, route_cap=4096)
 
 
 def build_smoke_ladder(workload: str):
-    return [(n, dict(s, **SMOKE)) for n, s in build_ladder(workload)]
+    out = []
+    for n, s in build_ladder(workload):
+        merged = dict(s, **SMOKE)
+        if s.get("expect_drained"):
+            # `epochs` on a draining rung is the drain *bound*, not the
+            # measured window — clamping it to the smoke window would turn
+            # the rung into a guaranteed bound-hit failure.
+            merged["epochs"] = s["epochs"]
+        if "reps" in s:
+            merged["reps"] = min(s["reps"], 8)
+        out.append((n, merged))
+    return out
 
 
 def main():
@@ -310,7 +444,15 @@ def main():
             # to check only 3 of the 6 (fb_overflow/route_overflow dropped
             # events without failing the rung).
             clean = not r.get("unclean")
-            if "modes" in r:
+            if spec.get("campaign"):
+                disp = {m: v["dispatches_per_campaign"]
+                        for m, v in r["modes"].items()}
+                print(f"  {r['ev_s']:,.0f} ev/s aggregate over "
+                      f"{r['replications']} replications  "
+                      f"dispatches/campaign {disp}  "
+                      f"speedup={r['speedup_vs_host_loop']:.2f}x "
+                      f"drained={r['drained']} clean={clean}")
+            elif "modes" in r:
                 disp = {m: v["dispatches_per_simulation"]
                         for m, v in r["modes"].items()}
                 print(f"  {r['ev_s']:,.0f} ev/s  dispatches/simulation "
@@ -323,6 +465,12 @@ def main():
                       f"rebalances={r['stats']['rebalances']} clean={clean}")
             if not clean:
                 print(f"  UNCLEAN {r['unclean']} — run is invalid")
+                failed.append(name)
+            if spec.get("expect_drained") and r.get("bound_hit"):
+                # a draining rung that hit its epoch bound reported ev/s for
+                # a simulation that never finished — not a result.
+                print(f"  BOUND HIT at epochs={spec['epochs']} with events "
+                      f"still in flight — expected a full drain")
                 failed.append(name)
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:

@@ -1,0 +1,25 @@
+"""Campaign engine: whole parameter sweeps as single-dispatch simulations.
+
+A *campaign* is a grid of model-parameter points × a set of replication
+seeds.  Parameters select distinct compiled programs (they are trace-time
+constants — different shapes, branches, weights), while seeds are pure data:
+all of a point's replications run stacked through the engine's
+replication-vmapped fused drain (:meth:`ParsirEngine.run_replicated_drained`)
+— ONE XLA dispatch per parameter point, regardless of the seed count.
+
+Modules:
+  * :mod:`repro.campaign.spec`   — :class:`CampaignSpec`: the declarative
+    grid (seeds × model kwargs × engine config), canonically digestible;
+  * :mod:`repro.campaign.store`  — :class:`ResultsStore`: one JSON per grid
+    point under a digest-keyed run directory, with the spec + git commit in a
+    manifest — re-running a campaign skips completed points (resumability);
+  * :mod:`repro.campaign.runner` — :func:`run_campaign`: the loop that wires
+    them to the engine.
+
+The CLI face is :mod:`repro.launch.campaign`.
+"""
+from .spec import CampaignSpec
+from .store import ResultsStore
+from .runner import run_campaign
+
+__all__ = ["CampaignSpec", "ResultsStore", "run_campaign"]

@@ -1,0 +1,93 @@
+"""Digest-keyed results store with resumable campaign runs.
+
+Layout under the store root::
+
+    <root>/<digest12>/manifest.json    — the spec (canonical dict), full
+                                         digest, and the git commit the run
+                                         started from
+    <root>/<digest12>/point-<i>.json   — one result per grid point, indexed
+                                         by the spec's deterministic
+                                         enumeration (spec.points())
+
+Keying the run directory by the spec digest makes resumption safe by
+construction: a re-run of the *same* spec skips every ``point-<i>.json``
+already present, while any change to the spec (grid, seeds, engine config)
+changes the digest and starts a fresh directory — stale results can never be
+mistaken for the new campaign's.  The manifest's commit records provenance
+only; it deliberately does not key the directory (a reproducible spec should
+resume across commits — bit-exactness is the engine's contract, and the
+conformance suite enforces it).
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+from pathlib import Path
+from typing import Any
+
+from .spec import CampaignSpec
+
+
+def git_commit(cwd: str | None = None) -> str:
+    """The current git HEAD, or ``"unknown"`` outside a checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=cwd,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except OSError:
+        return "unknown"
+
+
+class ResultsStore:
+    """One directory per campaign digest; one JSON file per grid point."""
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+
+    def run_dir(self, spec: CampaignSpec) -> Path:
+        return self.root / spec.digest()[:12]
+
+    def _point_path(self, spec: CampaignSpec, index: int) -> Path:
+        return self.run_dir(spec) / f"point-{index}.json"
+
+    # -- manifest -----------------------------------------------------------
+
+    def write_manifest(self, spec: CampaignSpec) -> dict[str, Any]:
+        """Create the run directory + manifest (idempotent; an existing
+        manifest is verified against the spec digest, never overwritten)."""
+        d = self.run_dir(spec)
+        d.mkdir(parents=True, exist_ok=True)
+        path = d / "manifest.json"
+        if path.exists():
+            manifest = json.loads(path.read_text())
+            if manifest["digest"] != spec.digest():
+                raise ValueError(
+                    f"{path} holds a different campaign "
+                    f"(digest {manifest['digest'][:12]}, "
+                    f"expected {spec.digest()[:12]})")
+            return manifest
+        manifest = {"digest": spec.digest(), "commit": git_commit(),
+                    "n_points": len(spec.points()), "spec": spec.as_dict()}
+        path.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+        return manifest
+
+    # -- per-point results --------------------------------------------------
+
+    def has(self, spec: CampaignSpec, index: int) -> bool:
+        return self._point_path(spec, index).exists()
+
+    def get(self, spec: CampaignSpec, index: int) -> dict[str, Any]:
+        return json.loads(self._point_path(spec, index).read_text())
+
+    def put(self, spec: CampaignSpec, index: int,
+            result: dict[str, Any]) -> None:
+        path = self._point_path(spec, index)
+        tmp = path.with_suffix(".json.tmp")
+        tmp.write_text(json.dumps(result, indent=2, sort_keys=True))
+        tmp.replace(path)       # atomic: a crash never leaves a half entry
+
+    def missing(self, spec: CampaignSpec) -> list[int]:
+        """Grid-point indices not yet stored — empty iff the campaign is
+        complete (the CLI's exit criterion)."""
+        return [i for i in range(len(spec.points()))
+                if not self.has(spec, i)]

@@ -67,9 +67,19 @@ class SimModel(abc.ABC):
         """Per-object state pytree with leading dim ``len(global_ids)``."""
 
     @abc.abstractmethod
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         """The model's bootstrap events as flat numpy arrays
-        {dst:i32[K], ts:f32[K], seed:u32[K], payload:f32[K]}."""
+        {dst:i32[K], ts:f32[K], seed:u32[K], payload:f32[K]}.
+
+        ``seed`` selects the replication: implementations XOR
+        :func:`repro.core.events.seed_salt_np` into their init constant, so
+        replications share shapes/destinations but draw disjoint RNG streams.
+        ``None`` defers to the model's own ``params.seed`` (default 0 — the
+        historical, golden-pinned stream).  Initial *object state* is
+        deliberately seed-independent: all downstream randomness is
+        event-seed-driven, so salting the bootstrap events alone makes whole
+        trajectories diverge.
+        """
 
     def object_weights(self) -> np.ndarray | None:
         """Optional per-object expected-load hint, f64[n_objects].

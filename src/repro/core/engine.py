@@ -74,10 +74,16 @@ from .calendar import bucket_occupancy, make_calendar, make_fallback
 from .events import EventBatch
 from .pipeline import (AXIS, EngineConfig, EngineState, Stats, deliver,
                        make_step, zero_stats)
+from .pipeline.base import stats_dtype
 from .placement import Placement, equal_placement, weighted_placement
 
-__all__ = ["AXIS", "EngineConfig", "EngineState", "ParsirEngine", "Stats",
-           "make_step", "zero_stats"]
+__all__ = ["AXIS", "REP_AXIS", "EngineConfig", "EngineState", "ParsirEngine",
+           "Stats", "make_step", "zero_stats"]
+
+#: mesh axis name for replication-sharded campaigns (``rep_shards``): the
+#: device grid is ``(REP_AXIS=W, AXIS=1)``, so the step's collectives over
+#: ``AXIS`` are single-member no-ops and each replication stays local.
+REP_AXIS = "replications"
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -113,7 +119,14 @@ class ParsirEngine:
     """Build, initialize and run a PARSIR simulation on a device mesh."""
 
     def __init__(self, model: SimModel, cfg: EngineConfig,
-                 mesh: Mesh | None = None):
+                 mesh: Mesh | None = None, rep_shards: int | None = None):
+        """``mesh`` shards the *object* axis (the classic PARSIR layout:
+        D workers share one simulation).  ``rep_shards=W`` instead shards the
+        *replication* axis of :meth:`init_replicated` stacks across W devices
+        — each replication runs whole (collective-free) on its device, which
+        is the throughput layout for campaigns whose single replication fits
+        one device.  ``rep_shards`` requires the engine's own mesh to be
+        single-device and ``len(seeds) % W == 0``."""
         if mesh is None:
             mesh = Mesh(np.array(jax.devices()[:1]), (AXIS,))
         self.model, self.cfg, self.mesh = model, cfg, mesh
@@ -124,7 +137,9 @@ class ParsirEngine:
 
         self._step = make_step(model, cfg, self.placement)
         spec = P(AXIS)
+        rep_spec = P(None, AXIS)   # stacked leaves: [R, ...] sharded on dim 1
         self._sharding = NamedSharding(mesh, spec)
+        self._rep_sharding = NamedSharding(mesh, rep_spec)
         self._step_sm = jax.jit(_shard_map(self._step, mesh, (spec,), spec),
                                 donate_argnums=0)
         #: host-side XLA program launches (init ingest, step, run chunks,
@@ -169,6 +184,50 @@ class ParsirEngine:
         self._drain_sm = jax.jit(
             _shard_map(drain, mesh, (spec, P()), spec), donate_argnums=0)
 
+        def drain_replicated(state: EngineState,
+                             max_epochs: jax.Array) -> EngineState:
+            # The replication-vmapped fused drain: R independent simulations
+            # advance inside ONE lax.while_loop dispatch.  Every leaf of the
+            # carry is the [R, ...]-stacked per-device state; the body vmaps
+            # the epoch step over the replication axis (the collectives
+            # inside the step batch over R via their vmap rules, so one
+            # psum/all_gather/all_to_all serves all replications at once).
+            #
+            # Exit + freezing: the predicate is ANY replication still having
+            # in-flight events; a replication whose own pending count hit
+            # zero is *frozen* — the body computes its step but jnp.where
+            # keeps the old leaves — so its epoch counter and Stats stop at
+            # exactly its own drain epoch and its final state is leaf-exact
+            # vs an independent run_until_drained of that seed.  As in the
+            # scalar drain, pending is computed at the body END so the cond
+            # stays collective-free.
+            vstep = jax.vmap(self._step)
+            freeze = self._freeze_replications
+
+            def pending_of(s: EngineState) -> jax.Array:
+                per_rep = jax.vmap(
+                    lambda t: jnp.sum(t.cal.cnt)
+                    + jnp.sum(t.fb.events.valid.astype(jnp.int32)))(s)
+                return jax.lax.psum(per_rep, AXIS)          # i32 [R]
+
+            def cond(carry):
+                s, n, pending = carry
+                return jnp.any(pending > 0) & (n < max_epochs)
+
+            def body(carry):
+                s, n, pending = carry
+                active = pending > 0                        # bool [R]
+                s = freeze(active, vstep(s), s)
+                return s, n + jnp.int32(1), pending_of(s)
+
+            s, _, _ = jax.lax.while_loop(
+                cond, body, (state, jnp.int32(0), pending_of(state)))
+            return s
+
+        self._drain_rep_sm = jax.jit(
+            _shard_map(drain_replicated, mesh, (rep_spec, P()), rep_spec),
+            donate_argnums=0)
+
         def ingest(state: EngineState, batch: EventBatch) -> EngineState:
             dev = jax.lax.axis_index(AXIS)
             cur = state.epoch[0]
@@ -184,40 +243,186 @@ class ParsirEngine:
             return state._replace(cal=cal, fb=fb, stats=stats)
 
         self._ingest = jax.jit(_shard_map(ingest, mesh, (spec, P()), spec))
+        self._ingest_rep = jax.jit(
+            _shard_map(jax.vmap(ingest), mesh, (rep_spec, P()), rep_spec))
+
+        self.rep_shards = None if rep_shards is None else int(rep_shards)
+        if self.rep_shards is not None:
+            W = self.rep_shards
+            if D != 1:
+                raise ValueError(
+                    f"rep_shards requires a single-device engine mesh (got "
+                    f"D={D}): each replication runs whole on one device")
+            devs = jax.devices()
+            if W < 1 or len(devs) < W:
+                raise ValueError(
+                    f"rep_shards={W} needs {W} devices, have {len(devs)}")
+            # 2D device grid (REP_AXIS=W, AXIS=1): inside a shard the step's
+            # AXIS collectives act over a single member (identity), so every
+            # replication advances collective-free on its own device and the
+            # drain needs no cross-device traffic at all (each device's
+            # while_loop exits at its own local drain epoch).
+            mesh2 = Mesh(np.array(devs[:W]).reshape(W, 1), (REP_AXIS, AXIS))
+            rspec = P(REP_AXIS)   # stacked leaves sharded on the leading R
+            self._rep_mesh = mesh2
+            self._rep_sharding = NamedSharding(mesh2, rspec)
+
+            def drain_rep_sharded(state: EngineState,
+                                  max_epochs: jax.Array) -> EngineState:
+                # Same freeze contract as drain_replicated, but pending is
+                # the LOCAL [R/W] slice and — because the whole body is
+                # collective-free across devices (the AXIS collectives are
+                # single-member) — the cond can be local too: each device's
+                # while_loop exits as soon as ITS replications drain, with
+                # no cross-device sync at any point in the drain.
+                vstep = jax.vmap(self._step)
+                freeze = self._freeze_replications
+
+                def pending_of(s: EngineState) -> jax.Array:
+                    per_rep = jax.vmap(
+                        lambda t: jnp.sum(t.cal.cnt)
+                        + jnp.sum(t.fb.events.valid.astype(jnp.int32)))(s)
+                    return jax.lax.psum(per_rep, AXIS)      # i32 [R/W]
+
+                def cond(carry):
+                    s, n, p_loc = carry
+                    return jnp.any(p_loc > 0) & (n < max_epochs)
+
+                def body(carry):
+                    s, n, p_loc = carry
+                    active = p_loc > 0                      # bool [R/W]
+                    s = freeze(active, vstep(s), s)
+                    return s, n + jnp.int32(1), pending_of(s)
+
+                s, _, _ = jax.lax.while_loop(
+                    cond, body, (state, jnp.int32(0), pending_of(state)))
+                return s
+
+            self._drain_rep_sm = jax.jit(
+                _shard_map(drain_rep_sharded, mesh2, (rspec, P()), rspec),
+                donate_argnums=0)
+            self._ingest_rep = jax.jit(
+                _shard_map(jax.vmap(ingest), mesh2, (rspec, rspec), rspec))
+
+    def _freeze_replications(self, active, stepped: EngineState,
+                             old: EngineState) -> EngineState:
+        """Per-replication freeze for the stacked drains: keep ``old`` leaves
+        wherever ``active`` (the PRE-step pending mask, bool [R]) is False,
+        so a drained replication stops at exactly its own drain epoch.
+
+        The select is *light* where the drained-state fixpoint already
+        guarantees bit-equality: an empty calendar extracts, processes,
+        routes and delivers nothing, so the per-slot calendar buffers — by
+        far the largest state in the system — leave the step bit-identical
+        for frozen replications and ride through unmasked.  Selecting them
+        too forces a full-array copy every epoch, which measured *slower*
+        than the sequential host loop at campaign scale.  Only the leaves
+        the step advances unconditionally (epoch counter, decaying load,
+        Stats) plus the cheap small buffers take the mask.  Adaptive
+        placement is the exception: a post-drain rebalance may still
+        migrate rows, so it keeps the full-tree select.
+        """
+        def sel(new, olds):
+            return jnp.where(
+                active.reshape((-1,) + (1,) * (new.ndim - 1)), new, olds)
+        if self.cfg.placement == "adaptive":
+            return jax.tree.map(sel, stepped, old)
+        return stepped._replace(
+            cal=stepped.cal._replace(cnt=sel(stepped.cal.cnt, old.cal.cnt)),
+            fb=jax.tree.map(sel, stepped.fb, old.fb),
+            obj=jax.tree.map(sel, stepped.obj, old.obj),
+            epoch=sel(stepped.epoch, old.epoch),
+            stats=jax.tree.map(sel, stepped.stats, old.stats),
+            bounds=sel(stepped.bounds, old.bounds),
+            load=sel(stepped.load, old.load))
 
     # -- lifecycle -------------------------------------------------------------
 
-    def init(self) -> EngineState:
+    def _fresh_state(self, R: int | None) -> EngineState:
+        """The zeroed pre-ingest EngineState; ``R`` stacks every leaf with a
+        leading replication axis (sharded ``P(None, AXIS)``), ``None`` builds
+        the classic single-simulation layout."""
         D, M = self.D, self.placement.n_local_max
         cfg = self.cfg
-        obj_np = self.model.init_object_state(self.placement.padded_gids())
+        sharding = self._sharding if R is None else self._rep_sharding
+        rep = ((lambda l: l) if R is None
+               else (lambda l: jnp.broadcast_to(l[None], (R,) + l.shape)))
+        put = lambda l: jax.device_put(rep(jnp.asarray(l)), sharding)
         obj = jax.tree.map(
-            lambda l: jax.device_put(l, self._sharding), obj_np)
-        cal = make_calendar(D * M, cfg.n_buckets, cfg.bucket_cap)
-        cal = jax.tree.map(lambda l: jax.device_put(l, self._sharding), cal,
-                           is_leaf=lambda x: isinstance(x, jax.Array))
-        fb = make_fallback(D * cfg.fallback_cap)
-        fb = jax.tree.map(lambda l: jax.device_put(l, self._sharding), fb,
-                          is_leaf=lambda x: isinstance(x, jax.Array))
-        epoch = jax.device_put(jnp.zeros((D,), jnp.int32), self._sharding)
-        stats = jax.tree.map(
-            lambda l: jax.device_put(jnp.tile(l, D), self._sharding),
-            zero_stats())
+            put, self.model.init_object_state(self.placement.padded_gids()))
+        cal = jax.tree.map(put,
+                           make_calendar(D * M, cfg.n_buckets, cfg.bucket_cap))
+        fb = jax.tree.map(put, make_fallback(D * cfg.fallback_cap))
+        epoch = put(jnp.zeros((D,), jnp.int32))
+        stats = jax.tree.map(lambda l: put(jnp.tile(l, D)), zero_stats())
         b = jnp.asarray(np.asarray(self.placement.boundaries, np.int32))
-        bounds = jax.device_put(jnp.tile(b[None, :], (D, 1)), self._sharding)
-        load = jax.device_put(jnp.zeros((D * M,), jnp.int32), self._sharding)
-        state = EngineState(cal, fb, obj, epoch, stats, bounds, load)
+        bounds = put(jnp.tile(b[None, :], (D, 1)))
+        load = put(jnp.zeros((D * M,), jnp.int32))
+        return EngineState(cal, fb, obj, epoch, stats, bounds, load)
 
-        init_ev = self.model.initial_events()
-        batch = EventBatch(
+    def _initial_batch(self, seed: int | None) -> EventBatch:
+        init_ev = (self.model.initial_events() if seed is None
+                   else self.model.initial_events(seed))
+        return EventBatch(
             dst=jnp.asarray(init_ev["dst"], jnp.int32),
             ts=jnp.asarray(init_ev["ts"], jnp.float32),
             seed=jnp.asarray(init_ev["seed"], jnp.uint32),
             payload=jnp.asarray(init_ev["payload"], jnp.float32),
             valid=jnp.ones((len(init_ev["dst"]),), bool),
         )
+
+    def init(self, seed: int | None = None) -> EngineState:
+        """Build the initial state and ingest the bootstrap events.
+
+        ``seed`` selects the replication stream (forwarded to the model's
+        ``initial_events``); ``None`` keeps the model's own default."""
+        state = self._fresh_state(None)
         self.dispatches += 1
-        return self._ingest(state, batch)
+        return self._ingest(state, self._initial_batch(seed))
+
+    def init_replicated(self, seeds) -> EngineState:
+        """Build an R-replication stacked state, one bootstrap stream per
+        seed.  Every leaf leads with the replication axis ``R = len(seeds)``
+        (initial object state is identical across replications — trajectories
+        diverge through the seed-salted bootstrap events alone); run it with
+        :meth:`run_replicated_drained`."""
+        seeds = [int(s) for s in seeds]
+        if not seeds:
+            raise ValueError("init_replicated needs at least one seed")
+        if self.rep_shards and len(seeds) % self.rep_shards:
+            raise ValueError(
+                f"rep_shards={self.rep_shards} needs len(seeds) divisible by"
+                f" it (got {len(seeds)})")
+        state = self._fresh_state(len(seeds))
+        batches = [self._initial_batch(s) for s in seeds]
+        batch = EventBatch(*(jnp.stack(ls) for ls in zip(*batches)))
+        self.dispatches += 1
+        return self._ingest_rep(state, batch)
+
+    def check_stats_bound(self, n_epochs: int) -> None:
+        """Fail fast if ``n_epochs`` epochs could overflow a Stats counter.
+
+        The in-carry ledger accumulates in :func:`stats_dtype` — int32 unless
+        ``JAX_ENABLE_X64=1`` widens it to int64 — and int32 overflow would
+        wrap *silently* inside the fused loop.  The worst-case per-device
+        per-epoch increment of any counter is bounded by the largest static
+        buffer a stage can fill: the epoch bucket (``n_local_max *
+        bucket_cap``, plus claimed loans under stealing), the route buffer,
+        or the fallback list.  Every run entry point checks this bound
+        before dispatching.
+        """
+        cap = int(jnp.iinfo(stats_dtype()).max)
+        per_epoch = self.placement.n_local_max * self.cfg.bucket_cap
+        if self.cfg.steal:
+            per_epoch += self.cfg.claim_cap * self.cfg.bucket_cap
+        per_epoch = max(per_epoch, self.cfg.route_cap, self.cfg.fallback_cap)
+        if int(n_epochs) * per_epoch > cap:
+            raise ValueError(
+                f"{n_epochs} epochs could overflow the {stats_dtype().__name__}"
+                f" Stats counters (worst-case {per_epoch} events/epoch/device,"
+                f" bound {int(n_epochs) * per_epoch:,} > {cap:,}); set"
+                f" JAX_ENABLE_X64=1 to widen the ledger to int64, or split"
+                f" the horizon")
 
     def step(self, state: EngineState) -> EngineState:
         self.dispatches += 1
@@ -231,6 +436,7 @@ class ParsirEngine:
         never retraces — the historical per-length ``scan`` cache is retired.
         ``state`` is donated: rebind the result, the input handle dies.
         """
+        self.check_stats_bound(n_epochs)
         self.dispatches += 1
         return self._run_sm(state, jnp.int32(n_epochs))
 
@@ -259,10 +465,52 @@ class ParsirEngine:
         without guessing an epoch count — and without paying per-chunk
         host dispatch.
         """
+        self.check_stats_bound(max_epochs)
         self.dispatches += 1
         return self._drain_sm(state, jnp.int32(max_epochs))
 
+    def run_replicated_drained(self, state: EngineState,
+                               max_epochs: int) -> EngineState:
+        """Drain R independent replications as ONE XLA dispatch.
+
+        ``state`` is the stacked carry of :meth:`init_replicated`; the fused
+        ``lax.while_loop`` vmaps the epoch step over the replication axis and
+        exits when *every* replication's in-flight count is zero (or at
+        ``max_epochs``).  A replication that drains early is frozen in-carry
+        — its epoch counter, Stats and object state stop at its own drain
+        epoch — so each slice of the result is leaf-exact vs an independent
+        ``run_until_drained`` of that seed (and therefore bit-exact vs its
+        own sequential oracle for dyadic workloads).  Buffers are donated:
+        rebind the result, the input handle dies.
+
+        Read the result per replication with :meth:`replication`,
+        :meth:`totals_replicated` and :meth:`in_flight_replicated`.
+        """
+        self.check_stats_bound(max_epochs)
+        self.dispatches += 1
+        return self._drain_rep_sm(state, jnp.int32(max_epochs))
+
     # -- inspection -------------------------------------------------------------
+
+    def replication(self, state: EngineState, r: int) -> EngineState:
+        """Slice replication ``r`` out of a stacked state — the result has
+        the classic single-simulation layout, so every scalar inspection
+        helper (:meth:`totals`, :meth:`in_flight`, ...) applies to it."""
+        return jax.tree.map(lambda l: l[r], state)
+
+    def totals_replicated(self, state: EngineState) -> list[dict[str, int]]:
+        """Per-replication Stats totals of a stacked state, in seed order."""
+        sums = {k: np.asarray(l).reshape(l.shape[0], -1).sum(axis=1)
+                for k, l in state.stats._asdict().items()}
+        return [{k: int(v[r]) for k, v in sums.items()}
+                for r in range(state.epoch.shape[0])]
+
+    def in_flight_replicated(self, state: EngineState) -> np.ndarray:
+        """Per-replication in-flight event counts, i64[R]."""
+        R = state.epoch.shape[0]
+        cal = np.asarray(state.cal.cnt).reshape(R, -1).sum(axis=1)
+        fb = np.asarray(state.fb.events.valid).reshape(R, -1).sum(axis=1)
+        return (cal + fb).astype(np.int64)
 
     def totals(self, state: EngineState) -> dict[str, int]:
         st = jax.tree.map(lambda l: int(np.sum(np.asarray(l))), state.stats)

@@ -66,8 +66,20 @@ class Stats(NamedTuple):
     migrated: jax.Array              # object rows received via rebalance migration
 
 
+def stats_dtype() -> jnp.dtype:
+    """Counter dtype for the in-carry Stats ledger.
+
+    int64 when the runtime allows it (``JAX_ENABLE_X64=1``) — wide enough for
+    any campaign; int32 otherwise (the JAX default truncates int64 silently),
+    in which case the engine *fails fast* before any dispatch whose
+    worst-case per-counter increment could overflow
+    (:meth:`repro.core.engine.ParsirEngine` checks the bound).
+    """
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
 def zero_stats() -> Stats:
-    z = jnp.zeros((1,), jnp.int32)
+    z = jnp.zeros((1,), stats_dtype())
     return Stats(z, z, z, z, z, z, z, z, z, z)
 
 

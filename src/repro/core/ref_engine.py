@@ -67,14 +67,19 @@ def as_emitted(out: Any) -> list[dict]:
     return [e for e in out if e.get("valid", True)]
 
 
-def run_sequential(model: Any, n_epochs: int, epoch_len: float) -> SequentialResult:
-    """Run until simulation time ``n_epochs * epoch_len`` (exclusive)."""
+def run_sequential(model: Any, n_epochs: int, epoch_len: float,
+                   seed: int | None = None) -> SequentialResult:
+    """Run until simulation time ``n_epochs * epoch_len`` (exclusive).
+
+    ``seed`` selects the replication's bootstrap stream, mirroring the
+    engine's ``init(seed=...)`` (``None`` keeps the model's own default)."""
     horizon = np.float32(n_epochs) * np.float32(epoch_len)
     max_out = getattr(model, "max_out", 1)
     res = SequentialResult(model.n_objects)
     state = model.init_object_state_np(np.arange(model.n_objects))
 
-    init = model.initial_events()
+    init = (model.initial_events() if seed is None
+            else model.initial_events(seed))
     heap: list[tuple] = []
     for dst, ts, seed, payload in zip(init["dst"], init["ts"], init["seed"],
                                       init["payload"]):

@@ -48,6 +48,9 @@ class PholdParams:
     # hot_objects ids — a skewed workload that exercises work stealing.
     hot_objects: int = 0
     hot_prob: int = 0              # out of 256
+    # replication seed: salts the bootstrap event stream only (seed=0 is the
+    # historical stream); see SimModel.initial_events.
+    seed: int = 0
 
     @property
     def touch(self) -> int:
@@ -107,12 +110,13 @@ class Phold(SimModel):
         w[:p.hot_objects] += h / p.hot_objects
         return w
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _INIT_C ^ ev.seed_salt_np(p.seed if seed is None else seed)
         o = np.repeat(np.arange(p.n_objects, dtype=np.uint32), p.initial_events)
         m = np.tile(np.arange(p.initial_events, dtype=np.uint32), p.n_objects)
         with np.errstate(over="ignore"):
-            s0 = ev._mix_np(ev._mix_np(o ^ _INIT_C) + m * np.uint32(0x9E3779B9))
+            s0 = ev._mix_np(ev._mix_np(o ^ c) + m * np.uint32(0x9E3779B9))
         ts0 = _draw_np(ev.fold_np(s0, 2), p).astype(np.float32)
         return {
             "dst": o.astype(np.int32),

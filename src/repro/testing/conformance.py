@@ -140,6 +140,33 @@ def axes_of(cfg: EngineConfig, n_devices: int) -> str:
             f"D={n_devices}")
 
 
+def _assert_vs_oracle(eng: ParsirEngine, st, tot: dict,
+                      ref: SequentialResult, dyadic: bool,
+                      ctx: str) -> np.ndarray:
+    """The oracle-agreement assertions shared by the scalar and replicated
+    conformance faces: processed count, pending (dst, seed) multiset, and —
+    for dyadic workloads — bit-exact object state.  Returns the pending
+    records."""
+    assert tot["processed"] == ref.total_processed, \
+        f"{ctx} processed {tot['processed']} != oracle {ref.total_processed}"
+
+    pend = engine_pending(eng, st)
+    ref_pend = ref.pending_sorted()
+    assert pend.shape == ref_pend.shape, \
+        f"{ctx} pending count {pend.shape[0]} != oracle {ref_pend.shape[0]}"
+    np.testing.assert_array_equal(
+        pend, ref_pend, err_msg=f"{ctx} pending (dst, seed) multiset")
+
+    if dyadic:
+        want = stack_oracle_state(ref.obj_state)
+        obj = eng.global_object_state(st)
+        assert set(want) == set(obj), (ctx, set(want), set(obj))
+        for k in want:
+            np.testing.assert_array_equal(
+                obj[k], want[k], err_msg=f"{ctx} object state [{k}]")
+    return pend
+
+
 def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
                     engine_kw: dict | None = None, mesh=None,
                     dyadic: bool = True,
@@ -183,23 +210,7 @@ def run_conformance(model: Any, overrides: dict, *, n_epochs: int,
 
     if ref is None:
         ref = run_sequential(model, n_epochs, cfg.epoch_len)
-    assert tot["processed"] == ref.total_processed, \
-        f"{ctx} processed {tot['processed']} != oracle {ref.total_processed}"
-
-    pend = engine_pending(eng, st)
-    ref_pend = ref.pending_sorted()
-    assert pend.shape == ref_pend.shape, \
-        f"{ctx} pending count {pend.shape[0]} != oracle {ref_pend.shape[0]}"
-    np.testing.assert_array_equal(
-        pend, ref_pend, err_msg=f"{ctx} pending (dst, seed) multiset")
-
-    if dyadic:
-        want = stack_oracle_state(ref.obj_state)
-        obj = eng.global_object_state(st)
-        assert set(want) == set(obj), (ctx, set(want), set(obj))
-        for k in want:
-            np.testing.assert_array_equal(
-                obj[k], want[k], err_msg=f"{ctx} object state [{k}]")
+    pend = _assert_vs_oracle(eng, st, tot, ref, dyadic, ctx)
 
     return {"totals": tot, "pending": int(pend.shape[0]), "ref": ref,
             "config": kw, "n_epochs": n_epochs}
@@ -238,6 +249,59 @@ def check_workload(name: str, config: str, *, mesh=None,
     return report
 
 
+def check_workload_replicated(name: str, config: str, *, replications: int,
+                              mesh=None, rep_shards=None) -> dict:
+    """Conformance-check the replication-vmapped fused drain.
+
+    Runs ``replications`` seeds of the workload stacked through ONE
+    ``run_replicated_drained`` dispatch (bounded by the workload's
+    conformance horizon), then holds **every** replication slice to the full
+    scalar contract against its *own* seeded sequential oracle: clean
+    counters, processed count, pending multiset, bit-exact dyadic state.
+    This is the strongest correctness face of the campaign engine — each
+    replication must be indistinguishable from having run alone.
+
+    ``rep_shards=W`` checks the replication-sharded layout instead (mesh
+    must be single-device): the R axis is split across W devices and each
+    replication steps collective-free inside its shard — same contract,
+    same oracles.
+    """
+    spec = conformance_spec(name)
+    overrides = dict(SWEEP[config])
+    if overrides.get("batch_impl") == "model" \
+            and not spec["supports_batch_impl"]:
+        raise ValueError(f"workload {name} has no process_batch")
+    model = get_workload(name, **spec["model_kw"])
+    n_epochs = spec["n_epochs"]
+    lookahead = model.params.lookahead
+    frac = overrides.pop("epoch_len_frac", None)
+    kw = dict(lookahead=lookahead)
+    kw.update(spec["engine_kw"])
+    kw.update(overrides)
+    if frac is not None:
+        kw["epoch_len"] = lookahead * frac
+        n_epochs = int(round(n_epochs / frac))
+    cfg = EngineConfig(**kw)
+
+    eng = ParsirEngine(model, cfg, mesh=mesh, rep_shards=rep_shards)
+    seeds = list(range(replications))
+    st = eng.run_replicated_drained(eng.init_replicated(seeds), n_epochs)
+    totals = eng.totals_replicated(st)
+
+    processed = []
+    for r, seed in enumerate(seeds):
+        ctx = (f"[{name}/{config} R={replications} rep={r} seed={seed}: "
+               f"{axes_of(cfg, eng.D)}]")
+        tot = totals[r]
+        assert_clean(tot, context=ctx)
+        rep_st = eng.replication(st, r)
+        ref = run_sequential(model, n_epochs, cfg.epoch_len, seed=seed)
+        _assert_vs_oracle(eng, rep_st, tot, ref, spec["dyadic"], ctx)
+        processed.append(tot["processed"])
+    return {"processed": processed, "totals": totals, "config": kw,
+            "n_epochs": n_epochs}
+
+
 # ---------------------------------------------------------------------------
 # subprocess driver (multi-device sweeps)
 # ---------------------------------------------------------------------------
@@ -258,7 +322,19 @@ def main(argv=None) -> int:
                          "loop (run_until_drained bounded by the workload's "
                          "n_epochs) instead of host-chunked run — same "
                          "assertions, one XLA dispatch")
+    ap.add_argument("--replications", type=int, default=0, metavar="R",
+                    help="run R seeds stacked through ONE replication-vmapped"
+                         " fused drain (run_replicated_drained) and hold "
+                         "every replication to the full scalar contract "
+                         "against its own seeded oracle")
+    ap.add_argument("--rep-shards", type=int, default=0, metavar="W",
+                    help="with --replications: shard the R axis across W "
+                         "devices (each replication collective-free on its "
+                         "own device) instead of object-sharding — the "
+                         "campaign throughput layout, same oracle contract")
     args = ap.parse_args(argv)
+    if args.rep_shards and not args.replications:
+        ap.error("--rep-shards requires --replications")
 
     import jax
     from jax.sharding import Mesh
@@ -282,6 +358,21 @@ def main(argv=None) -> int:
         if SWEEP[config].get("batch_impl") == "model" \
                 and not spec["supports_batch_impl"]:
             print(f"SKIP {args.workload} {config} (no process_batch)")
+            continue
+        if args.replications:
+            # rep-sharding runs each replication whole on one device: the
+            # engine's own (object) mesh is single-device, W devices carry
+            # the replication axis.
+            rmesh = (Mesh(np.array(devs[:1]), (AXIS,)) if args.rep_shards
+                     else mesh)
+            rep = check_workload_replicated(
+                args.workload, config, mesh=rmesh,
+                replications=args.replications,
+                rep_shards=args.rep_shards or None)
+            layout = (f"rep_shards={args.rep_shards}" if args.rep_shards
+                      else f"D={args.devices}")
+            print(f"OK {args.workload} {config} {layout} "
+                  f"R={args.replications} processed={rep['processed']}")
             continue
         report = check_workload(args.workload, config, mesh=mesh,
                                 ref_cache=ref_cache, drain=args.drain)

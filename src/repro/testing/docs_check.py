@@ -14,11 +14,13 @@ oracle runs, sub-second):
   3. ``docs/writing-a-workload.md`` (the tutorial whose steps, followed
      literally, reproduce a registration) mentions every registry id's
      module-level contract hooks;
-  4. the CLI driver (``repro.launch.simulate``) exposes every orchestration
-     axis and sources each choice-typed flag from the sanctioned registry
-     symbol (``all_workloads()``, the :mod:`repro.core.pipeline.names`
-     truth sets) — a hardcoded choices list is how the driver rotted to
-     phold-only while five more workloads shipped.
+  4. the CLI drivers (``repro.launch.simulate`` and
+     ``repro.launch.campaign``) expose every orchestration axis — plus,
+     for the campaign driver, the sweep axes (seeds/grid/store) — and
+     source each choice-typed flag from the sanctioned registry symbol
+     (``all_workloads()``, the :mod:`repro.core.pipeline.names` truth
+     sets) — a hardcoded choices list is how the simulate driver rotted
+     to phold-only while five more workloads shipped.
 
 Deliberately stdlib-only (plus the pure-python registry module): the CI
 docs job runs it with no installed dependencies, so nothing here may
@@ -121,20 +123,29 @@ def check_tutorial(repo_root: str = REPO_ROOT) -> list[str]:
             for hook in TUTORIAL_HOOKS if hook not in text]
 
 
-#: choice-typed simulate.py flag → the sanctioned symbol its ``choices=``
+#: choice-typed CLI flag → the sanctioned symbol its ``choices=``
 #: expression must reference (registry truth, never a hardcoded list).
-SIMULATE_CHOICE_SOURCES = {
+#: Both launch drivers share these axes.
+CLI_CHOICE_SOURCES = {
     "--workload": "all_workloads",
     "--scheduler": "SELECTABLE_SCHEDULERS",
     "--route": "ROUTES",
     "--batch-impl": "BATCH_IMPLS",
     "--placement": "PLACEMENTS",
 }
+SIMULATE_CHOICE_SOURCES = CLI_CHOICE_SOURCES  # back-compat alias
 
-#: every orchestration axis the CLI driver must expose.
-SIMULATE_REQUIRED_FLAGS = tuple(SIMULATE_CHOICE_SOURCES) + (
+#: every orchestration axis each CLI driver must expose.
+SIMULATE_REQUIRED_FLAGS = tuple(CLI_CHOICE_SOURCES) + (
     "--devices", "--rebalance-every", "--model-kw", "--steal", "--drain",
     "--verify")
+
+#: the campaign driver adds the sweep axes on top of the orchestration ones
+#: (no --drain/--verify: a campaign is always the fused drain, and each
+#: replication's conformance face lives in the harness's --replications).
+CAMPAIGN_REQUIRED_FLAGS = tuple(CLI_CHOICE_SOURCES) + (
+    "--devices", "--rebalance-every", "--model-kw", "--steal", "--seeds",
+    "--grid", "--epochs", "--store", "--require-drained")
 
 
 def _load_stage_names(repo_root: str):
@@ -149,9 +160,13 @@ def _load_stage_names(repo_root: str):
     return mod
 
 
-def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
+def _check_cli(script: str, required: tuple[str, ...],
+               repo_root: str = REPO_ROOT) -> list[str]:
+    """AST-check one ``repro.launch`` driver: every required flag exposed,
+    every choice-typed flag's ``choices=`` sourced from its registry symbol
+    (or an exact literal match — hardcoded lists rot as registries grow)."""
     import ast
-    path = os.path.join(repo_root, "src", "repro", "launch", "simulate.py")
+    path = os.path.join(repo_root, "src", "repro", "launch", script)
     with open(path) as f:
         tree = ast.parse(f.read())
     flags: dict[str, ast.expr | None] = {}
@@ -165,10 +180,10 @@ def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
             flags[node.args[0].value] = choices
 
     problems = []
-    for flag in SIMULATE_REQUIRED_FLAGS:
+    for flag in required:
         if flag not in flags:
             problems.append(
-                f"repro/launch/simulate.py exposes no `{flag}` — the CLI "
+                f"repro/launch/{script} exposes no `{flag}` — the CLI "
                 f"driver must cover every orchestration axis the engine has")
 
     names = _load_stage_names(repo_root)
@@ -177,12 +192,12 @@ def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
              "--route": set(names.ROUTES),
              "--batch-impl": set(names.BATCH_IMPLS),
              "--placement": set(names.PLACEMENTS)}
-    for flag, symbol in SIMULATE_CHOICE_SOURCES.items():
-        if flag not in flags:
-            continue  # already reported above
+    for flag, symbol in CLI_CHOICE_SOURCES.items():
+        if flag not in flags or flag not in required:
+            continue  # missing flags already reported above
         choices = flags[flag]
         if choices is None:
-            problems.append(f"simulate.py `{flag}` has no choices= — drive "
+            problems.append(f"{script} `{flag}` has no choices= — drive "
                             f"it from `{symbol}`")
             continue
         referenced = {n.id for n in ast.walk(choices)
@@ -197,15 +212,24 @@ def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
             literal = None
         if literal != truth[flag]:
             problems.append(
-                f"simulate.py `{flag}` choices are not sourced from "
+                f"{script} `{flag}` choices are not sourced from "
                 f"`{symbol}` (and don't literal-match it) — hardcoded "
                 f"choice lists rot as registries grow")
     return problems
 
 
+def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
+    return _check_cli("simulate.py", SIMULATE_REQUIRED_FLAGS, repo_root)
+
+
+def check_campaign_cli(repo_root: str = REPO_ROOT) -> list[str]:
+    return _check_cli("campaign.py", CAMPAIGN_REQUIRED_FLAGS, repo_root)
+
+
 def run_all(repo_root: str = REPO_ROOT) -> list[str]:
     return (check_readme_table(repo_root) + check_golden_coverage(repo_root)
-            + check_tutorial(repo_root) + check_simulate_cli(repo_root))
+            + check_tutorial(repo_root) + check_simulate_cli(repo_root)
+            + check_campaign_cli(repo_root))
 
 
 def main(argv=None) -> int:

@@ -37,6 +37,7 @@ class ClusterParams:
     restart_time: float = 25.0     # dyadic-representable
     lookahead: float = 0.5
     dist: str = "dyadic"           # dyadic | uniform24 | exponential
+    seed: int = 0                  # replication seed (bootstrap stream salt)
 
 
 class ClusterModel(SimModel):
@@ -61,12 +62,13 @@ class ClusterModel(SimModel):
             "busy_time": jnp.zeros((n,), jnp.float32),
         }
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _C_INIT ^ ev.seed_salt_np(p.seed if seed is None else seed)
         # n_rings tokens start at evenly spaced nodes; payload carries the
         # current holder's node id (process_event has no identity input).
         starts = (np.arange(p.n_rings) * (p.n_nodes // p.n_rings)) % p.n_nodes
-        s0 = ev._mix_np(np.arange(p.n_rings).astype(np.uint32) ^ _C_INIT)
+        s0 = ev._mix_np(np.arange(p.n_rings).astype(np.uint32) ^ c)
         return {
             "dst": starts.astype(np.int32),
             "ts": np.zeros(p.n_rings, np.float32),

@@ -55,6 +55,7 @@ class EpidemicParams:
     lookahead: float = 0.5         # L — min event-time increment
     service_mean: float = 1.0      # scale for non-dyadic draws
     dist: str = "dyadic"           # dyadic | uniform24 | exponential
+    seed: int = 0                  # replication seed (bootstrap stream salt)
 
     def __post_init__(self):
         if self.n_patches < 2:
@@ -106,10 +107,11 @@ class EpidemicModel(SimModel):
             "last_ts": jnp.zeros((n,), jnp.float32),
         }
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _EPI_INIT ^ ev.seed_salt_np(p.seed if seed is None else seed)
         gids = self._seed_gids()
-        s0 = ev._mix_np(gids.astype(np.uint32) ^ _EPI_INIT)
+        s0 = ev._mix_np(gids.astype(np.uint32) ^ c)
         ts0 = ev.draw_np(ev.fold_np(s0, 2), p.dist, p.service_mean)
         return {
             "dst": gids.astype(np.int32),

@@ -49,16 +49,17 @@ class HotspotPhold(Phold):
         boost[:p.hot_objects] += p.hot_boost
         return w * boost
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _INIT_C ^ ev.seed_salt_np(p.seed if seed is None else seed)
         counts = np.full(p.n_objects, p.initial_events, np.int64)
         counts[:p.hot_objects] *= 1 + p.hot_boost
         o = np.repeat(np.arange(p.n_objects, dtype=np.uint32), counts)
-        m = np.concatenate([np.arange(c, dtype=np.uint32) for c in counts])
+        m = np.concatenate([np.arange(n, dtype=np.uint32) for n in counts])
         # same (object, sequence-number) seed formula as uniform PHOLD — the
         # skew is purely in how many events each object bootstraps.
         with np.errstate(over="ignore"):
-            s0 = ev._mix_np(ev._mix_np(o ^ _INIT_C) + m * np.uint32(0x9E3779B9))
+            s0 = ev._mix_np(ev._mix_np(o ^ c) + m * np.uint32(0x9E3779B9))
         ts0 = _draw_np(ev.fold_np(s0, 2), p).astype(np.float32)
         return {
             "dst": o.astype(np.int32),

@@ -56,6 +56,7 @@ class OpenQueueingParams:
     service_mean: float = 1.0      # scale for non-dyadic draws
     dist: str = "dyadic"           # dyadic | uniform24 | exponential
     max_jobs: int = 0              # per-source job budget; 0 = unbounded
+    seed: int = 0                  # replication seed (bootstrap stream salt)
 
     def __post_init__(self):
         for role in ("n_sources", "n_stage1", "n_forks", "n_stage2",
@@ -108,10 +109,11 @@ class OpenQueueingNetwork(SimModel):
             "sojourn": jnp.zeros((n,), jnp.float32),
         }
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _OQ_INIT ^ ev.seed_salt_np(p.seed if seed is None else seed)
         i = np.arange(p.n_sources, dtype=np.uint32)
-        s0 = ev._mix_np(i ^ _OQ_INIT)
+        s0 = ev._mix_np(i ^ c)
         ts0 = ev.draw_np(ev.fold_np(s0, 2), p.dist, p.service_mean)
         return {
             "dst": i.astype(np.int32),

@@ -35,6 +35,7 @@ class QueueingParams:
     lookahead: float = 0.5         # L — min service time, engine lookahead
     service_mean: float = 1.0      # scale for non-dyadic service draws
     dist: str = "dyadic"           # dyadic | uniform24 | exponential
+    seed: int = 0                  # replication seed (bootstrap stream salt)
 
 
 class ClosedQueueingNetwork(SimModel):
@@ -58,10 +59,11 @@ class ClosedQueueingNetwork(SimModel):
             "wait_time": jnp.zeros((n,), jnp.float32),
         }
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _Q_INIT ^ ev.seed_salt_np(p.seed if seed is None else seed)
         j = np.arange(p.n_jobs, dtype=np.uint32)
-        s0 = ev._mix_np(j ^ _Q_INIT)
+        s0 = ev._mix_np(j ^ c)
         ts0 = ev.draw_np(ev.fold_np(s0, 2), p.dist, p.service_mean)
         return {
             "dst": (j % np.uint32(p.n_stations)).astype(np.int32),

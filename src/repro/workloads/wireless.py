@@ -61,6 +61,7 @@ class WirelessParams:
     lookahead: float = 0.5         # L — min gap/holding-time increment
     service_mean: float = 1.0      # scale for non-dyadic draws
     dist: str = "dyadic"           # dyadic | uniform24 | exponential
+    seed: int = 0                  # replication seed (bootstrap stream salt)
 
     def __post_init__(self):
         if self.n_cells < 2:
@@ -112,15 +113,16 @@ class WirelessModel(SimModel):
             "count": jnp.zeros((n,), jnp.int32),
         }
 
-    def initial_events(self) -> dict[str, np.ndarray]:
+    def initial_events(self, seed: int | None = None) -> dict[str, np.ndarray]:
         p = self.params
+        c = _WL_INIT ^ ev.seed_salt_np(p.seed if seed is None else seed)
         # one generator per cell, (1 + hot_streams) for hot cells.
         counts = np.ones(p.n_cells, np.int64)
         counts[:p.hot_cells] += p.hot_streams
         o = np.repeat(np.arange(p.n_cells, dtype=np.uint32), counts)
-        m = np.concatenate([np.arange(c, dtype=np.uint32) for c in counts])
+        m = np.concatenate([np.arange(n, dtype=np.uint32) for n in counts])
         with np.errstate(over="ignore"):
-            s0 = ev._mix_np(ev._mix_np(o ^ _WL_INIT)
+            s0 = ev._mix_np(ev._mix_np(o ^ c)
                             + m * np.uint32(0x9E3779B9))
         ts0 = ev.draw_np(ev.fold_np(s0, 2), p.dist, p.service_mean)
         return {

@@ -25,6 +25,10 @@ def test_simulate_cli_is_registry_driven():
     assert docs_check.check_simulate_cli() == []
 
 
+def test_campaign_cli_is_registry_driven():
+    assert docs_check.check_campaign_cli() == []
+
+
 def test_simulate_cli_check_catches_hardcoded_choices(tmp_path):
     # a driver that hardcodes a stale choices list (the exact phold-only rot
     # this check retires) must be flagged; a missing axis flag too.

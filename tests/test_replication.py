@@ -1,0 +1,247 @@
+"""The replication axis (engine.init_replicated / run_replicated_drained).
+
+`run_replicated_drained` vmaps the fused step body over a leading
+replication axis R, so R independent simulations — same model, different
+seeds — drain inside ONE ``lax.while_loop`` dispatch.  The drain predicate
+fires when *every* replication is empty; replications that drain early are
+frozen (per-leaf ``where`` on the pre-step pending mask), so each lands on
+exactly the state its own independent ``run_until_drained`` would produce,
+epoch counter and Stats ledger included.  Pinned here:
+
+* equivalence: for R ∈ {1, 8}, every replication of the vmapped drain is
+  leaf-exact (all EngineState fields, Stats included) against its own
+  independent fused drain with the same seed;
+* one dispatch for the whole stack, regardless of R;
+* seed threading: different seeds produce different initial-event streams
+  (and seed=0 reproduces the historical stream — pinned by test_golden);
+* the Stats-ledger overflow guard fails fast on horizons whose worst case
+  exceeds the counter dtype, and passes sane ones;
+* the campaign layer: grid enumeration is deterministic, the digest keys
+  the store, a second `run_campaign` over the same spec resumes every
+  point from disk, and a changed spec lands in a fresh directory.
+
+The D=4 face of the equivalence runs through the conformance subprocess
+driver's ``--replications`` flag (vmap *inside* shard_map: the body's
+collectives batch over R via their vmap rules).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, ParsirEngine
+from repro.testing import assert_clean
+from repro.workloads.registry import conformance_spec, get_workload
+
+from test_fused_drain import _assert_states_equal
+
+
+def _build(workload="wireless"):
+    spec = conformance_spec(workload)
+    model = get_workload(workload, **spec["model_kw"])
+    cfg = EngineConfig(lookahead=model.params.lookahead, **spec["engine_kw"])
+    return ParsirEngine(model, cfg), spec
+
+
+@pytest.mark.parametrize("workload,replications",
+                         [("wireless", 1), ("wireless", 8), ("phold", 4)])
+def test_replicated_drain_leaf_exact_vs_independent(workload, replications):
+    # wireless drains (finite call budgets); phold never does, so its
+    # replications all ride to the max_epochs bound — both paths must be
+    # leaf-exact against per-seed independent drains.
+    eng, spec = _build(workload)
+    n = spec["n_epochs"]
+    seeds = list(range(replications))
+
+    d0 = eng.dispatches
+    st = eng.init_replicated(seeds)
+    st = eng.run_replicated_drained(st, n)
+    assert eng.dispatches - d0 == 2  # ingest + the ONE vmapped drain
+
+    totals = eng.totals_replicated(st)
+    in_flight = eng.in_flight_replicated(st)
+    for r, seed in enumerate(seeds):
+        ref = eng.run_until_drained(eng.init(seed=seed), n)
+        _assert_states_equal(eng.replication(st, r), ref, include_epoch=True,
+                             ctx=f"{workload} R={replications} rep {r}")
+        assert totals[r] == eng.totals(ref)
+        assert int(in_flight[r]) == eng.in_flight(ref)
+        assert_clean(totals[r], context=f"{workload} rep {r}")
+
+
+def test_replications_drain_at_their_own_epochs():
+    # the freeze mask, observably: with different seeds the replications
+    # drain at different epochs, and each frozen epoch counter matches the
+    # independent drain exactly (no replication rides to the global max).
+    # (finite call budgets + no handoffs → the network really empties)
+    model = get_workload("wireless", n_cells=6, n_channels=2, max_calls=3,
+                         handoff_p=0, lookahead=0.5, dist="dyadic")
+    cfg = EngineConfig(lookahead=0.5, n_buckets=8, bucket_cap=64,
+                       route_cap=512, fallback_cap=512)
+    eng = ParsirEngine(model, cfg)
+    st = eng.init_replicated(range(6))
+    st = eng.run_replicated_drained(st, 200)
+    assert int(eng.in_flight_replicated(st).sum()) == 0
+    epochs = np.asarray(st.epoch)[:, 0]
+    assert len(set(epochs.tolist())) > 1, \
+        f"all replications froze at the same epoch: {epochs}"
+
+
+def test_seed_threads_into_initial_events():
+    eng, _ = _build("wireless")
+    a = eng.model.initial_events(0)
+    b = eng.model.initial_events(1)
+    assert not np.array_equal(a["seed"], b["seed"]), \
+        "seed=1 produced seed=0's initial-event stream"
+    # seed=None means params.seed (default 0): the historical stream that
+    # the golden digests pin.
+    np.testing.assert_array_equal(eng.model.initial_events()["seed"],
+                                  a["seed"])
+
+
+def test_init_replicated_rejects_empty_seed_list():
+    eng, _ = _build("wireless")
+    with pytest.raises(ValueError):
+        eng.init_replicated([])
+
+
+def test_stats_bound_fails_fast_before_dispatch():
+    # worst case is n_local_max*bucket_cap events/epoch/device; a horizon
+    # whose product exceeds the ledger dtype must raise BEFORE launching
+    # (silent int32 wraparound corrupted counters, not crashed).
+    import jax.numpy as jnp
+
+    from repro.core.pipeline.base import stats_dtype
+    eng, _ = _build("wireless")
+    cap = int(jnp.iinfo(stats_dtype()).max)
+    per_epoch = eng.placement.n_local_max * eng.cfg.bucket_cap
+    too_many = cap // per_epoch + 1
+    with pytest.raises(ValueError, match="overflow"):
+        eng.check_stats_bound(too_many)
+    d0 = eng.dispatches
+    with pytest.raises(ValueError, match="overflow"):
+        eng.run_replicated_drained(eng.init_replicated([0]), too_many)
+    assert eng.dispatches - d0 == 1  # only the ingest ran, never the drain
+    eng.check_stats_bound(256)  # sane horizons pass
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("workload,layout",
+                         [("wireless", "object"), ("phold-hotspot", "object"),
+                          ("wireless", "rep_shards")])
+def test_replicated_conformance_multidevice(workload, layout):
+    # 4 devices × R=8, both execution layouts of the stacked drain:
+    # *object*-sharded (vmap inside shard_map — the while_loop body's
+    # collectives batch over R) and *replication*-sharded (--rep-shards 4:
+    # the R axis splits across devices, each replication collective-free in
+    # its shard — the campaign throughput layout).  Each replication is
+    # checked against its own sequential oracle either way.
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    cmd = [sys.executable, "-m", "repro.testing.conformance",
+           "--workload", workload, "--devices", "4",
+           "--configs", "batch-a2a", "--replications", "8"]
+    if layout == "rep_shards":
+        cmd += ["--rep-shards", "4"]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "CONFORMANCE PASS" in r.stdout
+
+
+def test_rep_sharded_drain_matches_object_sharded_in_process():
+    # the rep-sharded layout on ONE device (rep_shards=1 — degenerate but
+    # exercises the 2D mesh, sharded ingest, local-pending freeze and the
+    # all_gathered drain predicate) must be leaf-exact vs per-seed
+    # independent drains, and must reject indivisible seed counts.
+    eng, spec = _build("wireless")
+    from repro.core.engine import EngineConfig as _EC, ParsirEngine as _PE
+    rs = _PE(eng.model, _EC(lookahead=eng.model.params.lookahead,
+                            **spec["engine_kw"]), rep_shards=1)
+    n = spec["n_epochs"]
+    st = rs.run_replicated_drained(rs.init_replicated([0, 1]), n)
+    for r, seed in enumerate([0, 1]):
+        ref = eng.run_until_drained(eng.init(seed=seed), n)
+        _assert_states_equal(rs.replication(st, r), ref, include_epoch=True,
+                             ctx=f"rep_shards=1 rep {r}")
+    with pytest.raises(ValueError, match="devices"):
+        _PE(eng.model, _EC(lookahead=eng.model.params.lookahead,
+                           **spec["engine_kw"]), rep_shards=64)
+
+
+# -- the campaign layer ------------------------------------------------------
+
+
+def _tiny_spec(**over):
+    from repro.campaign import CampaignSpec
+    kw = dict(
+        workload="wireless",
+        seeds=(0, 1, 2),
+        base_model_kw=dict(n_cells=6, n_channels=2, handoff_p=0,
+                           lookahead=0.5, dist="dyadic"),
+        grid={"max_calls": [2, 3]},
+        engine_kw=dict(lookahead=0.5, n_buckets=8, bucket_cap=64,
+                       route_cap=512, fallback_cap=512),
+        devices=1,
+        max_epochs=200,
+    )
+    kw.update(over)
+    return CampaignSpec(**kw)
+
+
+def test_campaign_grid_enumeration_is_deterministic():
+    spec = _tiny_spec(grid={"max_calls": [2, 3], "hot_streams": [0, 1]})
+    pts = spec.points()
+    assert len(pts) == 4
+    assert pts == spec.points()  # stable across calls
+    # every point carries the base kwargs plus one grid assignment
+    assert all(p["handoff_p"] == 0 for p in pts)
+    assert sorted((p["max_calls"], p["hot_streams"]) for p in pts) \
+        == [(2, 0), (2, 1), (3, 0), (3, 1)]
+    # grid/seed/engine changes all move the digest (the store key)
+    assert spec.digest() != _tiny_spec().digest()
+    assert _tiny_spec().digest() != _tiny_spec(seeds=(0, 1)).digest()
+
+
+def test_campaign_runs_then_resumes_from_store(tmp_path):
+    from repro.campaign import ResultsStore, run_campaign
+    spec = _tiny_spec()
+    store = ResultsStore(tmp_path / "results")
+
+    first = run_campaign(spec, store=store)
+    assert (first["ran"], first["resumed"]) == (2, 0)
+    assert first["missing"] == [] and first["unclean"] == []
+    assert first["undrained"] == []
+    for res in first["results"]:
+        assert res["dispatches"] == 2  # ingest + ONE vmapped drain
+        assert [rep["seed"] for rep in res["replications"]] == [0, 1, 2]
+        assert all(rep["in_flight"] == 0 for rep in res["replications"])
+
+    second = run_campaign(spec, store=store)
+    assert (second["ran"], second["resumed"]) == (0, 2)
+    # resumed results are the stored bits, not re-runs
+    assert [r["replications"] for r in second["results"]] \
+        == [r["replications"] for r in first["results"]]
+
+    # a different spec gets a fresh directory — no stale-result aliasing
+    other = _tiny_spec(seeds=(5, 6))
+    assert store.run_dir(other) != store.run_dir(spec)
+    assert store.missing(other) == [0, 1]
+
+
+def test_campaign_manifest_guards_against_digest_mismatch(tmp_path):
+    from repro.campaign import ResultsStore
+    spec = _tiny_spec()
+    store = ResultsStore(tmp_path)
+    store.write_manifest(spec)
+    store.write_manifest(spec)  # idempotent
+    clash = _tiny_spec(seeds=(9,))
+    # simulate a hand-mangled store: same dir, different campaign
+    (store.run_dir(clash)).mkdir(parents=True, exist_ok=True)
+    manifest = store.run_dir(spec) / "manifest.json"
+    (store.run_dir(clash) / "manifest.json").write_text(manifest.read_text())
+    with pytest.raises(ValueError, match="different campaign"):
+        store.write_manifest(clash)
