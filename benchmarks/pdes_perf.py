@@ -20,6 +20,11 @@ device count the stacked drive runs replication-*sharded* (``rep_shards``:
 each replication collective-free on its own device, capacities right-sized
 to one replication's traffic via ``rep_engine_kw``) — the layout that wins
 at campaign scale.
+The ``it6_speculation`` rung (wireless + epidemic, the draining loads)
+sweeps ``opt_window`` over {0, 1, 2, 4} and measures *epochs-to-drain* —
+fused while-loop iterations, ``spec_commits + rollbacks`` when speculating
+— which must fall strictly below the conservative drain at every W while
+the drained bits stay identical; rollbacks are reported alongside.
 Any rung whose run is unclean (nonzero overflow/causality counter, the full
 :mod:`repro.testing.clean` set) fails the driver with a nonzero exit —
 a perf number from a run that dropped events is not a result.  Draining
@@ -83,10 +88,74 @@ _CHILD = textwrap.dedent("""
                placement=spec.get("placement", "equal"),
                rebalance_every=spec.get("rebalance_every", 0),
                migrate_cap=spec.get("migrate_cap", 16),
-               placement_slack=spec.get("placement_slack", 2.0))
+               placement_slack=spec.get("placement_slack", 2.0),
+               opt_window=spec.get("opt_window", 0),
+               opt_stage_cap=spec.get("opt_stage_cap", 0))
     cfg = EngineConfig(**ckw)
     eng = ParsirEngine(model, cfg, mesh=mesh)
     from repro.testing import unclean_counters
+
+    if spec.get("speculation"):
+        # speculation rung (PR 9): the SAME draining simulation driven by the
+        # fused while_loop at every opt_window W in spec["windows"].  The
+        # honest metric is *epochs-to-drain* — while-loop iterations, i.e.
+        # spec_commits + rollbacks when speculating, epochs_run at W=0 —
+        # because each iteration is one barrier'd dispatch round: the window
+        # must cut iterations strictly below the conservative drain while
+        # reaching bit-identical drained state (asserted below, every W
+        # against the W=0 bits).  Rollbacks are *expected* at D>1 (every
+        # cross-device event into an open window is a straggler) and the
+        # rung surfaces them next to the win they price.
+        E = spec["epochs"]
+        windows, base, failures = {}, None, []
+        for W in spec["windows"]:
+            eng_w = ParsirEngine(model, EngineConfig(**dict(
+                ckw, opt_window=W)), mesh=mesh)
+            jax.block_until_ready(eng_w.run_until_drained(eng_w.init(), E))
+            st = eng_w.init()                       # measured pass
+            t0 = time.perf_counter()
+            st = eng_w.run_until_drained(st, E)
+            jax.block_until_ready(st)
+            dt = time.perf_counter() - t0
+            tot = eng_w.totals(st)
+            epochs_run = int(np.asarray(st.epoch)[0])
+            iters = (tot["spec_commits"] + tot["rollbacks"] if W
+                     else epochs_run)
+            obj = {k: np.asarray(v) for k, v in
+                   eng_w.global_object_state(st).items()}
+            if base is None:
+                base = dict(iters=iters, n=tot["processed"], obj=obj)
+            else:
+                assert tot["processed"] == base["n"], \
+                    f"W={W} diverged: {tot['processed']} != {base['n']}"
+                for k in obj:
+                    assert np.array_equal(obj[k], base["obj"][k]), \
+                        f"W={W} object state {k!r} diverges from W=0"
+                if iters >= base["iters"]:
+                    failures.append(f"W={W}: {iters} iterations >= "
+                                    f"conservative {base['iters']}")
+            windows[f"w{W}"] = {
+                "opt_window": W, "epochs_to_drain": iters,
+                "epochs_run": epochs_run, "dt": dt,
+                "ev_s": tot["processed"] / dt,
+                "rollbacks": tot["rollbacks"],
+                "spec_commits": tot["spec_commits"],
+                "speculated": tot["speculated"],
+                "drained": eng_w.in_flight(st) == 0,
+                "unclean": unclean_counters(tot)}
+        assert not failures, f"speculation never won: {failures}"
+        bad = {}
+        for wrec in windows.values():
+            for k, v in wrec["unclean"].items():
+                bad[k] = bad.get(k, 0) + v
+        drained = all(wrec["drained"] for wrec in windows.values())
+        best = max(windows.values(), key=lambda wrec: wrec["ev_s"])
+        print(json.dumps({"ev_s": best["ev_s"], "n": base["n"],
+                          "windows": windows, "unclean": bad,
+                          "drained": drained, "bound_hit": not drained,
+                          "epochs_run": max(wrec["epochs_run"]
+                                            for wrec in windows.values())}))
+        raise SystemExit(0)
 
     if spec.get("campaign"):
         # campaign rung: R replication seeds of the SAME draining simulation,
@@ -389,6 +458,26 @@ def build_ladder(workload: str):
                             model_kw=dict(max_calls=4),
                             rep_engine_kw=dict(bucket_cap=64, route_cap=2048,
                                                fallback_cap=4096))))
+        # the speculation rung (PR 9): the draining simulation above driven
+        # at opt_window 0/1/2/4 — epochs-to-drain (while-loop iterations)
+        # must fall strictly below the conservative drain at every W, bits
+        # identical, rollbacks reported next to the win they price.
+        ladder.append(("it6_speculation",
+                       dict(route="a2a", speculation=True,
+                            windows=[0, 1, 2, 4], epochs=256,
+                            expect_drained=True,
+                            model_kw=dict(max_calls=4))))
+    if workload == "epidemic":
+        # epidemic burns out (finite susceptible pool, absorbing recovered
+        # patches) once pop/trans_p stop sustaining the chain — the second,
+        # structurally different draining load for the speculation rung:
+        # state-dependent arity and ring-local traffic instead of the
+        # wireless hotspot.
+        ladder.append(("it6_speculation",
+                       dict(route="a2a", speculation=True,
+                            windows=[0, 1, 2, 4], o=128, epochs=512,
+                            expect_drained=True,
+                            model_kw=dict(pop=8, n_seeds=16, trans_p=96))))
     ladder.append(("ltf_reference_scheduler",
                    dict(route="a2a", sched="ltf", epochs=10, warm=2)))
     return ladder
@@ -410,6 +499,10 @@ def build_smoke_ladder(workload: str):
             merged["epochs"] = s["epochs"]
         if "reps" in s:
             merged["reps"] = min(s["reps"], 8)
+        if "windows" in s:
+            # one compile per window width — smoke keeps the conservative
+            # baseline plus a single speculative width.
+            merged["windows"] = [0, 2]
         out.append((n, merged))
     return out
 
@@ -422,6 +515,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, exit nonzero on any rung error "
                          "(CI guard against benchmark-driver rot)")
+    ap.add_argument("--rungs", default=None,
+                    help="comma-separated rung names to run (default: the "
+                         "full ladder); unknown names fail fast")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     D = args.devices
@@ -431,6 +527,12 @@ def main():
     failed = []
     results = {}
     ladder = (build_smoke_ladder if args.smoke else build_ladder)(args.workload)
+    if args.rungs:
+        want = set(args.rungs.split(","))
+        if (unknown := want - {n for n, _ in ladder}):
+            raise SystemExit(f"[pdes_perf] unknown rungs {sorted(unknown)} — "
+                             f"ladder has {[n for n, _ in ladder]}")
+        ladder = [(n, s) for n, s in ladder if n in want]
     for name, spec in ladder:
         print(f"[pdes_perf:{args.workload}] {name}...", flush=True)
         results[name] = run_child(D, args.workload, **spec)
@@ -451,6 +553,12 @@ def main():
                       f"{r['replications']} replications  "
                       f"dispatches/campaign {disp}  "
                       f"speedup={r['speedup_vs_host_loop']:.2f}x "
+                      f"drained={r['drained']} clean={clean}")
+            elif spec.get("speculation"):
+                line = "  ".join(
+                    f"W={w['opt_window']}: {w['epochs_to_drain']} iters "
+                    f"(rb={w['rollbacks']})" for w in r["windows"].values())
+                print(f"  {r['ev_s']:,.0f} ev/s best  {line}  "
                       f"drained={r['drained']} clean={clean}")
             elif "modes" in r:
                 disp = {m: v["dispatches_per_simulation"]

@@ -29,11 +29,28 @@ from .spec import CampaignSpec
 
 
 def git_commit(cwd: str | None = None) -> str:
-    """The current git HEAD, or ``"unknown"`` outside a checkout."""
+    """The current git HEAD (``+dirty`` if the tree has uncommitted
+    changes), or ``"unknown"`` outside a checkout.
+
+    The dirty marker matters for provenance: a manifest recording a bare
+    commit hash claims "this campaign ran the committed code", which is a
+    false claim from a modified working tree — resuming a campaign after
+    an innocent-looking local edit would silently mix results from two
+    different programs under one commit id.
+    """
     try:
         out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=cwd,
                              capture_output=True, text=True, timeout=10)
-        return out.stdout.strip() if out.returncode == 0 else "unknown"
+        if out.returncode != 0:
+            return "unknown"
+        head = out.stdout.strip()
+        status = subprocess.run(["git", "status", "--porcelain"], cwd=cwd,
+                                capture_output=True, text=True, timeout=10)
+        # a failed status check must not report a clean tree — fall back to
+        # the marker (provenance may only ever err toward "dirty").
+        if status.returncode != 0 or status.stdout.strip():
+            return head + "+dirty"
+        return head
     except OSError:
         return "unknown"
 
@@ -74,10 +91,30 @@ class ResultsStore:
     # -- per-point results --------------------------------------------------
 
     def has(self, spec: CampaignSpec, index: int) -> bool:
-        return self._point_path(spec, index).exists()
+        """True iff the point is stored AND parses as JSON.
+
+        Existence alone is not enough for the resume contract: a run killed
+        mid-write outside :meth:`put`'s atomic rename path (or a truncated
+        copy/restore) can leave a zero-byte or corrupt ``point-<i>.json``,
+        and treating it as done would silently hole the campaign.  Corrupt
+        points read as absent, so ``missing()`` schedules a re-run.
+        """
+        path = self._point_path(spec, index)
+        try:
+            json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return False
+        return True
 
     def get(self, spec: CampaignSpec, index: int) -> dict[str, Any]:
-        return json.loads(self._point_path(spec, index).read_text())
+        path = self._point_path(spec, index)
+        try:
+            return json.loads(path.read_text())
+        except FileNotFoundError:
+            raise KeyError(
+                f"campaign {spec.digest()[:12]} has no stored point "
+                f"{index} (expected {path}); run the campaign (or check "
+                f"missing()) before reading results") from None
 
     def put(self, spec: CampaignSpec, index: int,
             result: dict[str, Any]) -> None:

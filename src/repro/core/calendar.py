@@ -205,6 +205,36 @@ def clear_rows(cal: Calendar, dead: jax.Array) -> Calendar:
     return cal._replace(ts=ts, cnt=cnt)
 
 
+def take_buckets(cal: Calendar, first_epoch, n: int) -> Calendar:
+    """Snapshot ``n`` consecutive epoch buckets starting at ``first_epoch``.
+
+    The shadow-copy half of the speculation stage (pipeline/speculate.py):
+    the returned Calendar holds the window's buckets only — O(W) rows per
+    object, not the whole ring — in window order (bucket axis index w holds
+    epoch ``first_epoch + w``).  The complement of :func:`take_rows`: rows
+    select objects, this selects *epochs*.
+    """
+    idx = (first_epoch + jnp.arange(n, dtype=jnp.int32)) % cal.n_buckets
+    return Calendar(cal.ts[:, idx], cal.seed[:, idx], cal.payload[:, idx],
+                    cal.cnt[:, idx])
+
+
+def put_buckets(cal: Calendar, first_epoch, shadow: Calendar) -> Calendar:
+    """Restore a :func:`take_buckets` snapshot wholesale (rollback).
+
+    Every slot of the window's buckets is overwritten from the shadow —
+    speculative insertions vanish, speculative extractions reappear — so the
+    calendar is bit-restored to the snapshot point for those epochs.
+    Buckets outside the window are untouched.
+    """
+    n = shadow.ts.shape[1]
+    idx = (first_epoch + jnp.arange(n, dtype=jnp.int32)) % cal.n_buckets
+    return Calendar(cal.ts.at[:, idx].set(shadow.ts),
+                    cal.seed.at[:, idx].set(shadow.seed),
+                    cal.payload.at[:, idx].set(shadow.payload),
+                    cal.cnt.at[:, idx].set(shadow.cnt))
+
+
 class Fallback(NamedTuple):
     """The per-thread TLS fallback list (paper §II-B) → per-device buffer.
 

@@ -73,12 +73,12 @@ from .api import SimModel
 from .calendar import bucket_occupancy, make_calendar, make_fallback
 from .events import EventBatch
 from .pipeline import (AXIS, EngineConfig, EngineState, Stats, deliver,
-                       make_step, zero_stats)
+                       make_spec_step, make_step, zero_stats)
 from .pipeline.base import stats_dtype
 from .placement import Placement, equal_placement, weighted_placement
 
 __all__ = ["AXIS", "REP_AXIS", "EngineConfig", "EngineState", "ParsirEngine",
-           "Stats", "make_step", "zero_stats"]
+           "Stats", "make_spec_step", "make_step", "zero_stats"]
 
 #: mesh axis name for replication-sharded campaigns (``rep_shards``): the
 #: device grid is ``(REP_AXIS=W, AXIS=1)``, so the step's collectives over
@@ -136,6 +136,12 @@ class ParsirEngine:
         self.D = D
 
         self._step = make_step(model, cfg, self.placement)
+        #: the bounded-optimism (Time Warp lite) step — built only when the
+        #: config asks for it.  With opt_window == 0 nothing speculative is
+        #: even constructed and every compiled path below is byte-identical
+        #: to a pre-speculation build (no shadow copies, no second exchange).
+        self._spec_step = (make_spec_step(model, cfg, self.placement)
+                           if cfg.opt_window > 0 else None)
         spec = P(AXIS)
         rep_spec = P(None, AXIS)   # stacked leaves: [R, ...] sharded on dim 1
         self._sharding = NamedSharding(mesh, spec)
@@ -159,6 +165,19 @@ class ParsirEngine:
             # epoch count (the old per-n_epochs scan retraced per length).
             return jax.lax.fori_loop(0, n, lambda i, s: self._step(s), state)
 
+        if self._spec_step is not None:
+            def run_n(state: EngineState, n: jax.Array) -> EngineState:
+                # A speculative step advances a *variable* epoch count
+                # (W_eff + 1 on commit, 1 on abort), so the fixed-trip
+                # fori_loop becomes a while_loop on the replicated epoch
+                # counter.  The bound rides into the step, which clamps its
+                # last window to land on exactly epoch start + n — run(n)
+                # stays horizon-exact vs the oracle.
+                bound = state.epoch[0] + n
+                return jax.lax.while_loop(
+                    lambda s: s.epoch[0] < bound,
+                    lambda s: self._spec_step(s, bound), state)
+
         self._run_sm = jax.jit(
             _shard_map(run_n, mesh, (spec, P()), spec), donate_argnums=0)
 
@@ -180,6 +199,30 @@ class ParsirEngine:
             s, _, _ = jax.lax.while_loop(
                 cond, body, (state, jnp.int32(0), in_flight_device(state)))
             return s
+
+        if self._spec_step is not None:
+            def drain(state: EngineState, max_epochs: jax.Array) -> EngineState:
+                # Speculative fused drain: one while iteration is one
+                # committed-or-aborted window (epochs-to-drain, the number
+                # the it6 bench reports, is spec_commits + rollbacks), so
+                # the cap moves off the iteration count onto the replicated
+                # epoch counter — a window advances up to opt_window + 1
+                # epochs at once.  The shadow copies live entirely inside
+                # the step body; the loop carry is unchanged.
+                bound = state.epoch[0] + max_epochs
+
+                def cond(carry):
+                    s, pending = carry
+                    return (pending > 0) & (s.epoch[0] < bound)
+
+                def body(carry):
+                    s, _ = carry
+                    s = self._spec_step(s, bound)
+                    return s, in_flight_device(s)
+
+                s, _ = jax.lax.while_loop(
+                    cond, body, (state, in_flight_device(state)))
+                return s
 
         self._drain_sm = jax.jit(
             _shard_map(drain, mesh, (spec, P()), spec), donate_argnums=0)
@@ -223,6 +266,41 @@ class ParsirEngine:
             s, _, _ = jax.lax.while_loop(
                 cond, body, (state, jnp.int32(0), pending_of(state)))
             return s
+
+        if self._spec_step is not None:
+            def drain_replicated(state: EngineState,
+                                 max_epochs: jax.Array) -> EngineState:
+                # Replications commit/abort independently, so their epoch
+                # counters diverge — each gets its own bound and freezes
+                # when it drains or reaches it.  The freeze contract holds
+                # unchanged: a drained replication's speculative step is a
+                # bit-exact no-op (empty buckets speculate nothing, V == 0,
+                # commit delivers nothing) and its advancing leaves (epoch,
+                # Stats incl. spec_commits) take the mask.
+                bounds_r = state.epoch[:, 0] + max_epochs       # i32 [R]
+                vstep = jax.vmap(self._spec_step)
+                freeze = self._freeze_replications
+
+                def pending_of(s: EngineState) -> jax.Array:
+                    per_rep = jax.vmap(
+                        lambda t: jnp.sum(t.cal.cnt)
+                        + jnp.sum(t.fb.events.valid.astype(jnp.int32)))(s)
+                    return jax.lax.psum(per_rep, AXIS)          # i32 [R]
+
+                def cond(carry):
+                    s, pending = carry
+                    return jnp.any((pending > 0)
+                                   & (s.epoch[:, 0] < bounds_r))
+
+                def body(carry):
+                    s, pending = carry
+                    active = (pending > 0) & (s.epoch[:, 0] < bounds_r)
+                    s = freeze(active, vstep(s, bounds_r), s)
+                    return s, pending_of(s)
+
+                s, _ = jax.lax.while_loop(
+                    cond, body, (state, pending_of(state)))
+                return s
 
         self._drain_rep_sm = jax.jit(
             _shard_map(drain_replicated, mesh, (rep_spec, P()), rep_spec),
@@ -297,6 +375,39 @@ class ParsirEngine:
                 s, _, _ = jax.lax.while_loop(
                     cond, body, (state, jnp.int32(0), pending_of(state)))
                 return s
+
+            if self._spec_step is not None:
+                def drain_rep_sharded(state: EngineState,
+                                      max_epochs: jax.Array) -> EngineState:
+                    # Per-rep epoch bounds as in the vmapped drain; the cond
+                    # stays local (the AXIS collectives inside the spec step
+                    # — the V psum included — are single-member no-ops, so
+                    # V is this replication's own verdict and each device's
+                    # loop still exits at its own local drain epoch).
+                    bounds_r = state.epoch[:, 0] + max_epochs   # i32 [R/W]
+                    vstep = jax.vmap(self._spec_step)
+                    freeze = self._freeze_replications
+
+                    def pending_of(s: EngineState) -> jax.Array:
+                        per_rep = jax.vmap(
+                            lambda t: jnp.sum(t.cal.cnt)
+                            + jnp.sum(t.fb.events.valid.astype(jnp.int32)))(s)
+                        return jax.lax.psum(per_rep, AXIS)      # i32 [R/W]
+
+                    def cond(carry):
+                        s, p_loc = carry
+                        return jnp.any((p_loc > 0)
+                                       & (s.epoch[:, 0] < bounds_r))
+
+                    def body(carry):
+                        s, p_loc = carry
+                        active = (p_loc > 0) & (s.epoch[:, 0] < bounds_r)
+                        s = freeze(active, vstep(s, bounds_r), s)
+                        return s, pending_of(s)
+
+                    s, _ = jax.lax.while_loop(
+                        cond, body, (state, pending_of(state)))
+                    return s
 
             self._drain_rep_sm = jax.jit(
                 _shard_map(drain_rep_sharded, mesh2, (rspec, P()), rspec),
@@ -425,6 +536,9 @@ class ParsirEngine:
                 f" the horizon")
 
     def step(self, state: EngineState) -> EngineState:
+        """Advance exactly one epoch (always the conservative step — the
+        single-epoch contract leaves no room to speculate; ``opt_window``
+        engages inside :meth:`run` and the fused drains)."""
         self.dispatches += 1
         return self._step_sm(state)
 

@@ -17,7 +17,9 @@ classes instead of string-dispatched branches inside one monolithic module:
   * :mod:`rebalance`   — ``none``, ``adaptive`` (epoch-boundary placement
     rebalancing with object migration);
   * :mod:`deliver`     — owner-side calendar/fallback insertion;
-  * :mod:`step`        — :func:`make_step`, the wiring.
+  * :mod:`step`        — :func:`make_step`, the wiring;
+  * :mod:`speculate`   — :func:`make_spec_step`, the bounded-optimism
+    (Time Warp lite) step used when ``EngineConfig.opt_window > 0``.
 
 Registering a new stage::
 
@@ -40,6 +42,7 @@ from .base import (AXIS, REBALANCERS, ROUTERS, SCHEDULERS, STEAL_POLICIES,
                    resolve_steal, zero_stats)
 from .config import EngineConfig
 from .deliver import deliver
+from .speculate import make_spec_step
 from .step import make_step
 
 __all__ = [
@@ -50,6 +53,6 @@ __all__ = [
     "register_steal_policy",
     "resolve_rebalance", "resolve_router", "resolve_scheduler",
     "resolve_steal",
-    "epoch_of", "zero_stats", "deliver", "make_step",
+    "epoch_of", "zero_stats", "deliver", "make_step", "make_spec_step",
     "PackedSlice", "pack_slice", "unpack_slice",
 ]

@@ -64,6 +64,10 @@ class Stats(NamedTuple):
     oob_events: jax.Array            # emitted dst outside [0, n_objects) (must be 0)
     rebalances: jax.Array            # adaptive-placement rebalance firings
     migrated: jax.Array              # object rows received via rebalance migration
+    rollbacks: jax.Array             # speculation windows aborted (straggler hit)
+    speculated: jax.Array            # events processed past the safe horizon
+    #                                  and committed (never counts aborted work)
+    spec_commits: jax.Array          # speculation windows committed
 
 
 def stats_dtype() -> jnp.dtype:
@@ -80,7 +84,7 @@ def stats_dtype() -> jnp.dtype:
 
 def zero_stats() -> Stats:
     z = jnp.zeros((1,), stats_dtype())
-    return Stats(z, z, z, z, z, z, z, z, z, z)
+    return Stats(*(z,) * len(Stats._fields))
 
 
 class EngineState(NamedTuple):

@@ -85,6 +85,22 @@ class EngineConfig:
                             Static per-device row pad over the equal
                             split — headroom for boundaries to skew
                             without reallocation.
+    ``opt_window``          epochs; default 0 (strictly conservative);
+                            >= 0.  W > 0 speculates up to W epochs past
+                            the safe horizon against a shadow copy and
+                            rolls the window back on any straggler
+                            (Time Warp lite — schedule-only, same bits).
+                            Requires n_buckets >= W + 2; incompatible
+                            with steal=True and placement='adaptive'
+                            (both rejected fail-fast: loans and row
+                            migration would escape the shadow copy).
+    ``opt_stage_cap``       events per device; default 0 → route_cap;
+                            >= 1 when speculating (0 otherwise).
+                            Staging buffer for speculative emissions
+                            that may not be published yet (remote dst,
+                            or beyond the shadow window); overflow
+                            aborts the window — counted as a rollback,
+                            never as a drop.
     ======================  =============================================
     """
 
@@ -111,6 +127,9 @@ class EngineConfig:
     placement_slack: float = 2.0     # adaptive: per-device row pad factor
     #                                  over the equal split (headroom for the
     #                                  boundaries to skew)
+    opt_window: int = 0              # speculation window W (0 = conservative)
+    opt_stage_cap: int = 0           # speculative-emission staging buffer
+    #                                  (0 → route_cap when speculating)
 
     def __post_init__(self):
         if self.lookahead <= 0:
@@ -152,6 +171,42 @@ class EngineConfig:
                 f"rebalance_every={self.rebalance_every} only applies to "
                 f"placement='adaptive' (got placement={self.placement!r}) — "
                 "it would silently do nothing")
+
+        if self.opt_window < 0:
+            raise ValueError(
+                f"opt_window must be >= 0, got {self.opt_window}")
+        if self.opt_window > 0:
+            if self.steal:
+                # a loaned batch is processed (and its state returned) by a
+                # non-owner; the owner's shadow copy could not cover it, so a
+                # rollback would lose the loan's effects.
+                raise ValueError(
+                    "opt_window > 0 is incompatible with steal=True — loaned "
+                    "batches execute outside the owner's shadow copy and "
+                    "could not be rolled back; disable stealing to speculate")
+            if self.placement == "adaptive":
+                # rebalancing migrates whole calendar rows mid-window; the
+                # O(W) bucket shadow cannot follow ownership moves.
+                raise ValueError(
+                    "opt_window > 0 is incompatible with placement="
+                    "'adaptive' — row migration would escape the window's "
+                    "shadow copy; use placement='equal' or 'weighted'")
+            if self.n_buckets < self.opt_window + 2:
+                raise ValueError(
+                    f"opt_window={self.opt_window} needs n_buckets >= "
+                    f"{self.opt_window + 2} (got {self.n_buckets}) — the "
+                    "shadow window plus the live epoch must fit the bucket "
+                    "ring without wrapping onto itself")
+            if self.opt_stage_cap == 0:
+                object.__setattr__(self, "opt_stage_cap", self.route_cap)
+            if self.opt_stage_cap < 1:
+                raise ValueError(
+                    f"opt_stage_cap must be >= 1 when speculating, got "
+                    f"{self.opt_stage_cap}")
+        elif self.opt_stage_cap:
+            raise ValueError(
+                f"opt_stage_cap={self.opt_stage_cap} only applies with "
+                f"opt_window > 0 — it would silently do nothing")
 
         # stage-name validation against the registries (populated on package
         # import; imported lazily here so config stays cycle-free).

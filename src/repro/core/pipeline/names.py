@@ -28,3 +28,10 @@ ROUTES: tuple[str, ...] = ("allgather", "a2a")
 
 #: ``EngineConfig.placement`` values (paper §II-A/§II-C knapsacks).
 PLACEMENTS: tuple[str, ...] = ("equal", "weighted", "adaptive")
+
+#: ``EngineConfig`` fields of the bounded-optimism speculation stage
+#: (Time Warp lite).  Every knob here must be exposed as a ``--opt-*`` CLI
+#: flag by the simulate driver — :mod:`repro.testing.docs_check` derives the
+#: required flag names from this tuple, so a new speculation knob that never
+#: reaches the CLI fails the docs job.
+SPECULATION_KNOBS: tuple[str, ...] = ("opt_window", "opt_stage_cap")

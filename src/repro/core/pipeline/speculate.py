@@ -1,0 +1,281 @@
+"""Bounded-optimism speculation: the Time Warp-lite epoch step (opt_window).
+
+With ``EngineConfig.opt_window = W > 0`` one step commits the *safe* epoch
+``e0`` conservatively and then speculates up to ``W`` further epochs against
+a shadow copy of the touched state — the per-object state pytree plus the
+``W`` calendar buckets of the window (O(W) rows per object, via
+:func:`repro.core.calendar.take_buckets` / ``put_buckets``, the epoch-axis
+complement of the PR 3 row-migration machinery).  The window is **globally
+atomic**: straggler detection happens at route/deliver time (any arriving
+event whose epoch falls inside the already-speculated window, on any
+device), the violation count is psum-reduced, and a nonzero count rolls
+*every* device back to its shadow before the epochs are re-processed
+conservatively on later steps.  Commit or abort, the drained state is
+bit-exact with the conservative path — same golden digests; the conformance
+sweep's ``speculation`` axis is the proof.
+
+Why the whole window, not per-object rollback: objects consume each other's
+*speculative* emissions inside the window (that is the point — intra-window
+event chains are what a pure leap would stall on), and calendar slots carry
+no provenance, so invalidating one object would require tracing a cascade
+the dataflow no longer records.  Aborting the window wholesale needs no
+anti-messages and no provenance: speculative emissions are either parked in
+a staging buffer (remote dst, or local beyond the window) or inserted into
+shadowed buckets, so discarding staging + restoring the shadow erases every
+speculative effect exactly.
+
+The step body, in order (collectives never inside a branch):
+
+  1. **safe sub-epoch** ``e0`` — extract, process; local emissions (and
+     local fallback re-offers) deliver immediately; remote in-horizon
+     emissions enter the safe route buffer; the fallback is rebuilt.  All
+     of this is committed regardless of the window's fate.
+  2. **shadow** — snapshot object state + window buckets ``e0+1 .. e0+W``.
+  3. **speculative sub-epochs** ``e0+w``, ``w = 1 .. W_eff`` (``W_eff``
+     clamps the window to the run bound) — extract, process; emissions with
+     local dst inside the shadowed window deliver immediately (feeding
+     later sub-epochs); everything else (remote, or local beyond the
+     window) parks in the staging buffer.  The fallback is never touched.
+  4. **two exchanges** — the safe buffer (must-keep: delivered in both
+     branches) and the staged remote in-horizon events (delivered on
+     commit, discarded wholesale on abort).  Two collectives instead of one
+     is what makes abort possible without anti-messages.
+  5. **violation count** — arrivals (either exchange) whose epoch is
+     ``<= e0 + W_eff``, plus staging/spec-route overflow (an event the
+     speculative path couldn't carry must not be *delayed* into lateness —
+     aborting re-emits it conservatively).  psum → identical verdict
+     everywhere.
+  6. **commit** (V == 0): keep speculated calendar/state, deliver both
+     arrival sets and the staged leftovers at ``cur = e0 + W_eff``,
+     advance the epoch by ``W_eff + 1``, fold the speculative Stats deltas
+     in (``speculated += ``, ``spec_commits += 1``).
+     **abort** (V > 0): restore the shadow, deliver only the safe arrivals
+     at ``cur = e0``, advance by 1, discard every speculative delta
+     (``rollbacks += 1``).  Progress is guaranteed: the safe epoch commits
+     either way, so a workload with constant cross-device traffic degrades
+     to conservative speed — never to livelock, and never to wrong bits.
+
+``rollbacks`` / ``speculated`` / ``spec_commits`` are activity meters, not
+error counters — deliberately absent from ``CLEAN_COUNTERS``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..api import SimModel
+from ..calendar import (Fallback, extract_sorted, fallback_put, insert,
+                        put_buckets, take_buckets)
+from ..events import (EventBatch, compact, compact_mask, concat_batches,
+                      empty_batch, truncate)
+from ..placement import Placement
+from . import routers, schedulers  # noqa: F401  (registration imports)
+from .base import (AXIS, EngineState, epoch_of, resolve_router,
+                   resolve_scheduler)
+from .config import EngineConfig
+from .deliver import deliver
+
+
+def _stage_put(staging: EventBatch, new: EventBatch):
+    """Append valid events of ``new`` into the staging buffer (compacting).
+
+    Same discipline as :func:`repro.core.calendar.fallback_put`, on a bare
+    EventBatch: overflow is *counted* — the step turns it into an abort, so
+    a too-small ``opt_stage_cap`` costs speed, never events.
+    """
+    merged = compact(concat_batches(staging, new))
+    cap = staging.capacity
+    spill = jnp.sum(merged.valid[..., cap:].astype(jnp.int32))
+    return truncate(merged, cap), spill
+
+
+def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
+                   ) -> Callable[[EngineState, jax.Array], EngineState]:
+    """Build the speculative step closure: ``step(state, bound)``.
+
+    ``bound`` is the exclusive epoch bound of the enclosing run/drain loop
+    (a traced operand): the window is clamped to ``W_eff = min(W, bound - 1
+    - e0)`` so a speculative step never processes an epoch the caller did
+    not ask for — ``run(n)`` lands on exactly epoch ``n``, and conformance
+    against the oracle's fixed horizon stays exact.
+    """
+    D = placement.n_devices
+    N = cfg.n_buckets
+    O = placement.n_objects
+    W = cfg.opt_window
+    assert W > 0, "make_spec_step requires opt_window > 0 (use make_step)"
+
+    scheduler = resolve_scheduler(cfg)
+    router = resolve_router(cfg.route)
+    scheduler.validate(model, cfg)
+    router.validate(cfg, placement)
+
+    def step(state: EngineState, bound: jax.Array) -> EngineState:
+        dev = jax.lax.axis_index(AXIS)
+        e0 = state.epoch[0]
+        pl = placement.with_boundaries(state.bounds[0])
+        boundaries = jnp.asarray(pl.boundaries, jnp.int32)
+        w_eff = jnp.clip(bound - 1 - e0, 0, W)
+
+        # -- 1. safe sub-epoch e0 (committed in both branches) --------------
+        cal, ts_s, seed_s, pay_s, cnt_b = extract_sorted(state.cal, e0)
+        obj, out_flat, lv0 = scheduler.process(model, cfg, state.obj,
+                                               ts_s, seed_s, pay_s, cnt_b)
+        proc0 = jnp.sum(cnt_b)
+
+        prod = concat_batches(out_flat, state.fb.events)
+        ep_p = epoch_of(prod.ts, cfg.epoch_len)
+        oob_p = prod.valid & ((prod.dst < 0) | (prod.dst >= O))
+        n_oob0 = jnp.sum(oob_p.astype(jnp.int32))
+        late_p = prod.valid & ~oob_p & (ep_p <= e0)
+        n_late0 = jnp.sum(late_p.astype(jnp.int32))
+        good = prod.valid & ~oob_p & ~late_p
+        local = good & (pl.owner(prod.dst) == dev)
+
+        # remote in-horizon events ride the (must-keep) safe exchange; local
+        # events skip the collective and deliver immediately — the window's
+        # sub-epochs must see them, and slot order inside a bucket is
+        # irrelevant (extraction re-sorts by (ts, seed)).
+        remote_eligible = good & ~local & (ep_p <= e0 + N)
+        safe_buf, send, route_ovf0 = router.select_send(prod, remote_eligible,
+                                                        pl, cfg)
+        kept = compact_mask(prod, good & ~local & ~send)
+        fb = Fallback(truncate(kept, cfg.fallback_cap))
+        fb_ovf0 = jnp.sum(kept.valid[cfg.fallback_cap:].astype(jnp.int32))
+        cal, fb, cal_ovf0, fb_ovf0b, late0b, _ = deliver(
+            cal, fb, prod._replace(valid=local), e0, dev, pl, cfg,
+            init=False, replicated=False)
+
+        # -- 2. shadow: window buckets + object state ------------------------
+        shadow_cal = take_buckets(cal, e0 + 1, W)
+        shadow_obj = obj
+
+        # -- 3. speculative sub-epochs --------------------------------------
+        zero = jnp.int32(0)
+        staging = empty_batch(cfg.opt_stage_cap)
+        # (cal, obj, staging, processed, lookahead, late, oob, cal_ovf,
+        #  stage_ovf) — stage_ovf feeds the violation count, the rest are
+        # Stats deltas applied only on commit.
+        carry = (cal, obj, staging, zero, zero, zero, zero, zero, zero)
+
+        def sub_epoch(w):
+            def run(c):
+                cal, obj, staging, proc, lv, late, oob, covf, sovf = c
+                cur = e0 + w
+                cal, ts_w, seed_w, pay_w, cnt_w = extract_sorted(cal, cur)
+                obj, out_w, lv_w = scheduler.process(model, cfg, obj,
+                                                     ts_w, seed_w, pay_w,
+                                                     cnt_w)
+                ep_w = epoch_of(out_w.ts, cfg.epoch_len)
+                oob_w = out_w.valid & ((out_w.dst < 0) | (out_w.dst >= O))
+                late_w = out_w.valid & ~oob_w & (ep_w <= cur)
+                good_w = out_w.valid & ~oob_w & ~late_w
+                # local + inside the shadowed window → insert now (later
+                # sub-epochs consume it); anything else parks in staging.
+                ins = good_w & (pl.owner(out_w.dst) == dev) & (ep_w <= e0 + W)
+                lidx = jnp.clip(out_w.dst - boundaries[dev], 0,
+                                cal.n_local - 1)
+                cal, covf_w = insert(cal, lidx, ep_w, out_w.ts, out_w.seed,
+                                     out_w.payload, ins)
+                staging, sovf_w = _stage_put(
+                    staging, compact_mask(out_w, good_w & ~ins))
+                return (cal, obj, staging, proc + jnp.sum(cnt_w), lv + lv_w,
+                        late + jnp.sum(late_w.astype(jnp.int32)),
+                        oob + jnp.sum(oob_w.astype(jnp.int32)),
+                        covf + covf_w, sovf + sovf_w)
+            return run
+
+        for w in range(1, W + 1):
+            carry = jax.lax.cond(w <= w_eff, sub_epoch(w), lambda c: c, carry)
+        (cal_sp, obj_sp, staging, spec_proc, spec_lv, spec_late, spec_oob,
+         spec_covf, stage_ovf) = carry
+
+        # -- 4. the two exchanges (unconditional: collectives stay out of
+        #       the commit/abort branches) ---------------------------------
+        routed_safe = router.exchange(safe_buf, pl, cfg)
+
+        ep_st = epoch_of(staging.ts, cfg.epoch_len)
+        stage_remote = staging.valid & (pl.owner(staging.dst) != dev)
+        # remote staged events up to the post-commit horizon ride the spec
+        # exchange — including window-epoch stragglers, whose *arrival* is
+        # exactly what the owner's violation count detects.
+        spec_eligible = stage_remote & (ep_st <= e0 + w_eff + N)
+        spec_buf, spec_send, spec_route_ovf = router.select_send(
+            staging, spec_eligible, pl, cfg)
+        routed_spec = router.exchange(spec_buf, pl, cfg)
+
+        # -- 5. straggler detection: psum-replicated verdict ----------------
+        def violations(batch: EventBatch) -> jax.Array:
+            ep = epoch_of(batch.ts, cfg.epoch_len)
+            mine = (batch.valid & (batch.dst >= 0) & (batch.dst < O)
+                    & (pl.owner(batch.dst) == dev))
+            return jnp.sum((mine & (ep <= e0 + w_eff)).astype(jnp.int32))
+
+        # a staged/spec-routed event the buffers couldn't carry must abort:
+        # parking it for a later epoch could make it LATE (dropped), and a
+        # conservative engine never drops — the abort re-emits it instead.
+        v_local = (violations(routed_safe) + violations(routed_spec)
+                   + stage_ovf + spec_route_ovf)
+        V = jax.lax.psum(v_local, AXIS)
+
+        # -- 6. commit or roll back (local ops only) ------------------------
+        def commit(_):
+            cur_c = e0 + w_eff
+            c, f, co1, fo1, l1, _ = deliver(
+                cal_sp, fb, routed_safe, cur_c, dev, pl, cfg, init=False,
+                replicated=router.replicated)
+            c, f, co2, fo2, l2, _ = deliver(
+                c, f, routed_spec, cur_c, dev, pl, cfg, init=False,
+                replicated=router.replicated)
+            # staged leftovers: local beyond the window → deliver (insert or
+            # park); remote beyond the post-commit horizon → fallback, to
+            # re-offer through routing on later epochs.
+            leftover = staging.valid & ~spec_send
+            lo_local = leftover & (pl.owner(staging.dst) == dev)
+            c, f, co3, fo3, l3, _ = deliver(
+                c, f, staging._replace(valid=lo_local), cur_c, dev, pl, cfg,
+                init=False, replicated=False)
+            f, fo4 = fallback_put(
+                f, staging._replace(valid=leftover & ~lo_local))
+            deltas = (spec_proc, spec_lv, spec_late, spec_oob,
+                      spec_covf + co1 + co2 + co3, fo1 + fo2 + fo3 + fo4,
+                      l1 + l2 + l3, zero,
+                      jnp.where(dev == 0, 1, 0).astype(jnp.int32),
+                      spec_proc)
+            return c, f, obj_sp, e0 + w_eff + 1, deltas
+
+        def abort(_):
+            c = put_buckets(cal_sp, e0 + 1, shadow_cal)
+            c, f, co, fo, l, _ = deliver(
+                c, fb, routed_safe, e0, dev, pl, cfg, init=False,
+                replicated=router.replicated)
+            deltas = (zero, zero, zero, zero, co, fo, l,
+                      jnp.where(dev == 0, 1, 0).astype(jnp.int32),
+                      zero, zero)
+            return c, f, shadow_obj, e0 + 1, deltas
+
+        cal_f, fb_f, obj_f, e_next, deltas = jax.lax.cond(
+            V == 0, commit, abort, None)
+        (d_proc, d_lv, d_late, d_oob, d_covf, d_fovf, d_l2,
+         d_rb, d_cm, d_spec) = deltas
+
+        st = state.stats
+        stats = st._replace(
+            processed=st.processed + proc0 + d_proc,
+            cal_overflow=st.cal_overflow + cal_ovf0 + d_covf,
+            fb_overflow=st.fb_overflow + fb_ovf0 + fb_ovf0b + d_fovf,
+            route_overflow=st.route_overflow + route_ovf0,
+            late_events=st.late_events + n_late0 + late0b + d_late + d_l2,
+            lookahead_violations=st.lookahead_violations + lv0 + d_lv,
+            oob_events=st.oob_events + n_oob0 + d_oob,
+            rollbacks=st.rollbacks + d_rb,
+            speculated=st.speculated + d_spec,
+            spec_commits=st.spec_commits + d_cm,
+        )
+        return EngineState(cal_f, fb_f, obj_f,
+                           jnp.reshape(e_next, state.epoch.shape), stats,
+                           state.bounds, state.load)
+
+    return step

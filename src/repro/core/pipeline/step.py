@@ -34,7 +34,7 @@ from ..calendar import Fallback, extract_sorted
 from ..events import compact_mask, concat_batches, truncate
 from ..placement import Placement
 from . import rebalance, routers, schedulers, steal  # noqa: F401  (registration imports)
-from .base import (AXIS, EngineState, Stats, epoch_of, resolve_rebalance,
+from .base import (AXIS, EngineState, epoch_of, resolve_rebalance,
                    resolve_router, resolve_scheduler, resolve_steal)
 from .config import EngineConfig
 from .deliver import deliver
@@ -108,7 +108,10 @@ def make_step(model: SimModel, cfg: EngineConfig, placement: Placement
             replicated=router.replicated)
 
         st = state.stats
-        stats = Stats(
+        # the conservative step never speculates: rollbacks / speculated /
+        # spec_commits ride through untouched (zero unless opt_window > 0,
+        # which routes to pipeline.speculate's step instead of this one).
+        stats = st._replace(
             processed=st.processed + proc_count,
             cal_overflow=st.cal_overflow + cal_ovf,
             fb_overflow=st.fb_overflow + fb_ovf + fb_ovf2,

@@ -72,6 +72,15 @@ def main():
                     help="adaptive placement: epochs between rebalances")
     ap.add_argument("--migrate-cap", type=int, default=16)
     ap.add_argument("--placement-slack", type=float, default=2.0)
+    ap.add_argument("--opt-window", type=int, default=0,
+                    help="speculate up to W epochs past the safe horizon "
+                         "(Time Warp lite; 0 = strictly conservative). "
+                         "Same bits either way — stragglers roll the window "
+                         "back; see stats rollbacks/speculated/spec_commits")
+    ap.add_argument("--opt-stage-cap", type=int, default=0,
+                    help="staging buffer for speculative emissions "
+                         "(0 = route_cap); overflow aborts the window, "
+                         "never drops")
     ap.add_argument("--n-buckets", type=int, default=16)
     ap.add_argument("--bucket-cap", type=int, default=256)
     ap.add_argument("--route-cap", type=int, default=8192)
@@ -111,7 +120,8 @@ def main():
         batch_impl=args.batch_impl, pack_tile=args.pack_tile,
         steal=args.steal, steal_cap=4, claim_cap=8,
         placement=args.placement, rebalance_every=args.rebalance_every,
-        migrate_cap=args.migrate_cap, placement_slack=args.placement_slack)
+        migrate_cap=args.migrate_cap, placement_slack=args.placement_slack,
+        opt_window=args.opt_window, opt_stage_cap=args.opt_stage_cap)
     eng = ParsirEngine(model, cfg, mesh=mesh)
 
     st = eng.init()

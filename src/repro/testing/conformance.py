@@ -21,10 +21,12 @@ parts:
 routing (allgather | a2a), stealing on/off, per-object batch implementation
 (vmap rounds | width-packed tiles | Pallas model kernel — ``packed`` is the
 "same bits, different schedule" axis and must stay bit-exact for every
-workload, composition and tile width), fractional epoch length, and placement
+workload, composition and tile width), fractional epoch length, placement
 (equal | weighted | adaptive — the oracle knows nothing of devices, so every
 packing, including runtime rebalancing with object migration, must reach the
-identical drained state).  The
+identical drained state), and speculation (``opt_window`` > 0 — windows past
+the safe horizon must commit or roll back to exactly the conservative bits,
+so the oracle contract is unchanged whether a run speculated or not).  The
 checks are emission-arity-agnostic: workloads with fan-out (``max_out > 1``)
 and absorption (events that emit nothing — the pending multiset *shrinks*)
 run through the identical assertions, since the generalized oracle
@@ -87,6 +89,21 @@ SWEEP: dict[str, dict] = {
     "steal-adaptive": dict(route="a2a", placement="adaptive",
                            rebalance_every=8, migrate_cap=8,
                            steal=True, steal_cap=2, claim_cap=4),
+    # speculation axis (bounded optimism, pipeline/speculate.py): windows up
+    # to opt_window epochs past the safe horizon must either commit or roll
+    # back to exactly the conservative bits — the oracle knows nothing of
+    # speculation, so every assertion below is unchanged.  W=4 needs
+    # n_buckets >= 6 (every conformance engine_kw has >= 8); steal and
+    # adaptive placement compositions are *rejected fail-fast* by
+    # EngineConfig (loans/migration escape the shadow copy), which
+    # tests/test_speculation.py asserts.
+    "spec-w1": dict(opt_window=1),
+    "spec-w2": dict(opt_window=2),
+    "spec-w4": dict(opt_window=4),
+    "spec-a2a": dict(route="a2a", opt_window=2),
+    "spec-packed-a2a": dict(route="a2a", batch_impl="packed", pack_tile=4,
+                            opt_window=2),
+    "spec-weighted": dict(placement="weighted", opt_window=2),
 }
 
 
@@ -137,7 +154,7 @@ def axes_of(cfg: EngineConfig, n_devices: int) -> str:
     return (f"scheduler={cfg.scheduler} batch_impl={impl} "
             f"route={cfg.route} steal={cfg.steal} "
             f"placement={cfg.placement} epoch_len={cfg.epoch_len:g} "
-            f"D={n_devices}")
+            f"opt_window={cfg.opt_window} D={n_devices}")
 
 
 def _assert_vs_oracle(eng: ParsirEngine, st, tot: dict,
@@ -317,6 +334,11 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-rebalances", type=int, default=0, metavar="N",
                     help="assert every adaptive config fired the rebalance "
                          "stage at least N times")
+    ap.add_argument("--expect-rollbacks", action="store_true",
+                    help="assert stats.rollbacks > 0 summed over speculation "
+                         "(opt_window > 0) configs — the negative path: "
+                         "stragglers actually hit the window and the engine "
+                         "rolled back, yet every assertion above still held")
     ap.add_argument("--drain", action="store_true",
                     help="run each config through the fused on-device drain "
                          "loop (run_until_drained bounded by the workload's "
@@ -354,6 +376,7 @@ def main(argv=None) -> int:
     spec = conformance_spec(args.workload)
     ref_cache: dict = {}
     stolen = 0
+    rollbacks = 0
     for config in names:
         if SWEEP[config].get("batch_impl") == "model" \
                 and not spec["supports_batch_impl"]:
@@ -379,6 +402,8 @@ def main(argv=None) -> int:
         tot = report["totals"]
         if SWEEP[config].get("steal"):
             stolen += tot["stolen"]
+        if SWEEP[config].get("opt_window"):
+            rollbacks += tot["rollbacks"]
         if SWEEP[config].get("placement") == "adaptive" \
                 and args.expect_rebalances:
             # `rebalances` sums the per-device counters: firings × D.
@@ -389,9 +414,13 @@ def main(argv=None) -> int:
         print(f"OK {args.workload} {config} D={args.devices} "
               f"processed={tot['processed']} pending={report['pending']} "
               f"stolen={tot['stolen']} rebalances={tot['rebalances']} "
-              f"migrated={tot['migrated']}")
+              f"migrated={tot['migrated']} rollbacks={tot['rollbacks']} "
+              f"speculated={tot['speculated']}")
     if args.expect_stolen:
         assert stolen > 0, "stealing never engaged across steal configs"
+    if args.expect_rollbacks:
+        assert rollbacks > 0, \
+            "no speculation window ever rolled back across opt_window configs"
     print("CONFORMANCE PASS")
     return 0
 

@@ -135,7 +135,11 @@ CLI_CHOICE_SOURCES = {
 }
 SIMULATE_CHOICE_SOURCES = CLI_CHOICE_SOURCES  # back-compat alias
 
-#: every orchestration axis each CLI driver must expose.
+#: every orchestration axis each CLI driver must expose.  The simulate
+#: driver additionally owes one ``--opt-*`` flag per speculation knob in
+#: ``names.SPECULATION_KNOBS`` — derived at check time (see
+#: :func:`_spec_flags`), never listed here, so a new knob that stays
+#: CLI-invisible fails the docs job automatically.
 SIMULATE_REQUIRED_FLAGS = tuple(CLI_CHOICE_SOURCES) + (
     "--devices", "--rebalance-every", "--model-kw", "--steal", "--drain",
     "--verify")
@@ -218,8 +222,17 @@ def _check_cli(script: str, required: tuple[str, ...],
     return problems
 
 
+def _spec_flags(repo_root: str = REPO_ROOT) -> tuple[str, ...]:
+    """``names.SPECULATION_KNOBS`` as CLI flag spellings
+    (``opt_window`` → ``--opt-window``)."""
+    names = _load_stage_names(repo_root)
+    return tuple("--" + knob.replace("_", "-")
+                 for knob in names.SPECULATION_KNOBS)
+
+
 def check_simulate_cli(repo_root: str = REPO_ROOT) -> list[str]:
-    return _check_cli("simulate.py", SIMULATE_REQUIRED_FLAGS, repo_root)
+    required = SIMULATE_REQUIRED_FLAGS + _spec_flags(repo_root)
+    return _check_cli("simulate.py", required, repo_root)
 
 
 def check_campaign_cli(repo_root: str = REPO_ROOT) -> list[str]:

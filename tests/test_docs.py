@@ -46,11 +46,19 @@ def test_simulate_cli_check_catches_hardcoded_choices(tmp_path):
         'ap.add_argument("--route", choices=["allgather", "a2a"])\n')
     problems = docs_check.check_simulate_cli(str(tmp_path))
     # --workload: stale literal list; --route: literal but matches truth →
-    # tolerated; every other required flag: missing.
+    # tolerated; every other required flag — including the --opt-* ones
+    # derived from names.SPECULATION_KNOBS — is missing.
     assert any("--workload" in p and "sourced" in p for p in problems)
     assert not any("`--route` choices" in p for p in problems)
-    missing = len(docs_check.SIMULATE_REQUIRED_FLAGS) - 2
+    missing = (len(docs_check.SIMULATE_REQUIRED_FLAGS)
+               + len(docs_check._spec_flags(str(tmp_path))) - 2)
     assert sum("exposes no" in p for p in problems) == missing
+    # the speculation knobs are spelled as flags and individually required:
+    # a new knob in names.SPECULATION_KNOBS that never reaches the CLI is
+    # exactly the drift this check exists to catch.
+    assert docs_check._spec_flags(str(tmp_path)) == ("--opt-window",
+                                                     "--opt-stage-cap")
+    assert any("exposes no `--opt-window`" in p for p in problems)
 
 
 def test_cli_exit_status_counts_problems(tmp_path):

@@ -232,6 +232,64 @@ def test_campaign_runs_then_resumes_from_store(tmp_path):
     assert store.missing(other) == [0, 1]
 
 
+def test_campaign_resume_reruns_corrupt_points(tmp_path):
+    # a run killed mid-write outside put()'s atomic rename (or a truncated
+    # restore) leaves a zero-byte / corrupt point-<i>.json; existence-based
+    # resume would count it done and hole the campaign.  Corrupt points must
+    # read as missing and be re-run.
+    from repro.campaign import ResultsStore, run_campaign
+    spec = _tiny_spec()
+    store = ResultsStore(tmp_path / "results")
+    first = run_campaign(spec, store=store)
+    assert store.missing(spec) == []
+
+    store._point_path(spec, 0).write_text("")            # zero-byte
+    store._point_path(spec, 1).write_text("{\"trunc")    # torn write
+    assert not store.has(spec, 0) and not store.has(spec, 1)
+    assert store.missing(spec) == [0, 1]
+
+    second = run_campaign(spec, store=store)
+    assert (second["ran"], second["resumed"]) == (2, 0)
+    assert [r["replications"] for r in second["results"]] \
+        == [r["replications"] for r in first["results"]]
+    assert store.missing(spec) == []
+
+
+def test_store_get_names_digest_and_index_when_absent(tmp_path):
+    from repro.campaign import ResultsStore
+    spec = _tiny_spec()
+    store = ResultsStore(tmp_path)
+    with pytest.raises(KeyError, match=f"{spec.digest()[:12]}.*point 1"):
+        store.get(spec, 1)
+
+
+def test_git_commit_marks_dirty_trees(tmp_path):
+    import subprocess
+    from repro.campaign.store import git_commit
+
+    # outside any checkout: unknown (tmp dirs don't sit under a repo)
+    assert git_commit(cwd=str(tmp_path)) == "unknown"
+
+    repo = tmp_path / "repo"
+    repo.mkdir()
+    def g(*a):
+        subprocess.run(["git", "-c", "user.email=t@example.com",
+                        "-c", "user.name=t", *a], cwd=repo, check=True,
+                       capture_output=True)
+    g("init")
+    g("commit", "--allow-empty", "-m", "seed")
+    clean = git_commit(cwd=str(repo))
+    assert len(clean) == 40 and not clean.endswith("+dirty")
+
+    (repo / "f.txt").write_text("untracked counts as dirty too")
+    assert git_commit(cwd=str(repo)) == clean + "+dirty"
+    g("add", "f.txt")
+    assert git_commit(cwd=str(repo)) == clean + "+dirty"   # staged, uncommitted
+    g("commit", "-m", "add f")
+    committed = git_commit(cwd=str(repo))
+    assert committed != clean and not committed.endswith("+dirty")
+
+
 def test_campaign_manifest_guards_against_digest_mismatch(tmp_path):
     from repro.campaign import ResultsStore
     spec = _tiny_spec()

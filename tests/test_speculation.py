@@ -1,0 +1,161 @@
+"""The bounded-optimism execution window (Time Warp lite, PR 9).
+
+Positive path, D=1: no cross-device straggler can exist, so every window
+commits — the engine must leap ``W + 1`` epochs per step, bit-exact vs the
+conservative run, with ``rollbacks == 0`` and an exactly predictable
+``spec_commits`` count.
+
+Negative path, D=4 (subprocess): real a2a cross-device arrivals land inside
+already-speculated windows — ``rollbacks`` MUST fire, and the conformance
+contract (clean counters, processed count, pending multiset, bit-exact
+dyadic state vs the oracle) must hold anyway, including through the fused
+drain loop.  This is the straggler-injection test: every cross-device event
+emitted while a window is open *is* a straggler by construction.
+
+Also here: the opt_window=0 no-cost guarantee (nothing speculative is even
+built — no shadow copies, byte-identical lowering), and the fail-fast
+rejection of compositions whose state moves would escape the shadow copy
+(stealing, adaptive placement), of a bucket ring too small for the window,
+and of a dead opt_stage_cap.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, ParsirEngine
+from repro.workloads.registry import conformance_spec, get_workload
+
+
+def _build(workload, model_kw=None, **over):
+    spec = conformance_spec(workload)
+    model = get_workload(workload, **dict(spec["model_kw"],
+                                          **(model_kw or {})))
+    kw = dict(lookahead=model.params.lookahead, **spec["engine_kw"], **over)
+    return ParsirEngine(model, EngineConfig(**kw)), spec
+
+
+CLEAN = ("cal_overflow", "fb_overflow", "route_overflow", "late_events",
+         "lookahead_violations", "oob_events")
+
+
+# -- positive path: the single-device leap -----------------------------------
+
+
+@pytest.mark.parametrize("W", [1, 2, 4])
+def test_single_device_windows_always_commit(W):
+    # D=1: every event is local, V == 0 always — windows commit wholesale.
+    # n_epochs split into ceil(n / (W+1)) windows, zero rollbacks, and the
+    # drained bits indistinguishable from the conservative run.
+    eng0, spec = _build("phold")
+    n = spec["n_epochs"]
+    s0 = eng0.run(eng0.init(), n)
+    t0 = eng0.totals(s0)
+
+    eng, _ = _build("phold", opt_window=W)
+    s = eng.run(eng.init(), n)
+    t = eng.totals(s)
+
+    assert t["rollbacks"] == 0
+    assert t["spec_commits"] == math.ceil(n / (W + 1))
+    assert t["speculated"] > 0
+    assert t["processed"] == t0["processed"]
+    assert all(t[k] == 0 for k in CLEAN)
+    assert int(np.asarray(s.epoch)[0]) == n    # bound-exact landing
+    o0, o = eng0.global_object_state(s0), eng.global_object_state(s)
+    for k in o0:
+        np.testing.assert_array_equal(o[k], o0[k], err_msg=f"obj[{k}] W={W}")
+    np.testing.assert_array_equal(np.asarray(s.cal.cnt),
+                                  np.asarray(s0.cal.cnt))
+
+
+def test_fused_drain_needs_fewer_iterations():
+    # epochs-to-drain: the conservative drain runs one while-iteration per
+    # epoch; the speculative drain commits whole windows per iteration
+    # (iterations = spec_commits + rollbacks) and must drain the same
+    # workload in strictly fewer, reaching the identical drained bits.
+    eng0, _ = _build("wireless", model_kw=dict(max_calls=4))
+    s0 = eng0.run_until_drained(eng0.init(), 512)
+    t0 = eng0.totals(s0)
+    epochs0 = int(np.asarray(s0.epoch)[0])
+    assert eng0.in_flight(s0) == 0
+
+    eng, _ = _build("wireless", model_kw=dict(max_calls=4), opt_window=2)
+    s = eng.run_until_drained(eng.init(), 512)
+    t = eng.totals(s)
+    assert eng.in_flight(s) == 0
+    iters = t["spec_commits"] + t["rollbacks"]
+    assert iters < epochs0, (iters, epochs0)
+    assert t["processed"] == t0["processed"]
+    o0, o = eng0.global_object_state(s0), eng.global_object_state(s)
+    for k in o0:
+        np.testing.assert_array_equal(o[k], o0[k])
+
+
+# -- opt_window=0: byte-identical, nothing speculative built -----------------
+
+
+def test_opt_window_zero_builds_nothing_speculative():
+    eng, spec = _build("phold")
+    assert eng._spec_step is None
+    # the compiled drain of a W=0 engine is deterministic and identical
+    # across builds (no speculative ops can leak in), and differs from a
+    # W>0 engine's (which carries the window machinery).
+    st = eng.init()
+    n = jnp.int32(8)
+    text0 = eng._drain_sm.lower(st, n).as_text()
+    eng_b, _ = _build("phold", opt_window=0)
+    assert eng_b._spec_step is None
+    assert eng_b._drain_sm.lower(eng_b.init(), n).as_text() == text0
+
+    eng_w, _ = _build("phold", opt_window=2)
+    assert eng_w._spec_step is not None
+    assert eng_w._drain_sm.lower(eng_w.init(), n).as_text() != text0
+
+
+# -- fail-fast rejection ------------------------------------------------------
+
+
+def test_speculation_rejects_escaping_compositions():
+    kw = dict(lookahead=0.5, n_buckets=8)
+    with pytest.raises(ValueError, match="steal"):
+        EngineConfig(**kw, opt_window=2, steal=True)
+    with pytest.raises(ValueError, match="adaptive"):
+        EngineConfig(**kw, opt_window=2, placement="adaptive",
+                     rebalance_every=8)
+    with pytest.raises(ValueError, match="n_buckets"):
+        EngineConfig(lookahead=0.5, n_buckets=4, opt_window=3)
+    with pytest.raises(ValueError, match="opt_window"):
+        EngineConfig(**kw, opt_window=-1)
+    with pytest.raises(ValueError, match="opt_stage_cap"):
+        EngineConfig(**kw, opt_stage_cap=64)   # dead without a window
+    # the staging default resolves to route_cap only when speculating
+    assert EngineConfig(**kw, route_cap=512).opt_stage_cap == 0
+    assert EngineConfig(**kw, route_cap=512,
+                        opt_window=2).opt_stage_cap == 512
+
+
+# -- negative path: stragglers roll the window back, bits survive ------------
+
+
+@pytest.mark.slow
+def test_multidevice_stragglers_roll_back_and_stay_exact():
+    # 4 devices, a2a exchange, fused drain: cross-device arrivals into open
+    # windows are stragglers by construction.  --expect-rollbacks asserts
+    # the negative path actually fired (rollbacks > 0) while the full
+    # oracle contract held (clean counters, processed count, pending
+    # multiset, bit-exact dyadic state).
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    cmd = [sys.executable, "-m", "repro.testing.conformance",
+           "--workload", "phold", "--devices", "4",
+           "--configs", "spec-a2a,spec-w2", "--drain", "--expect-rollbacks"]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "CONFORMANCE PASS" in r.stdout
