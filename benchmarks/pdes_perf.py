@@ -22,9 +22,16 @@ to one replication's traffic via ``rep_engine_kw``) — the layout that wins
 at campaign scale.
 The ``it6_speculation`` rung (wireless + epidemic, the draining loads)
 sweeps ``opt_window`` over {0, 1, 2, 4} and measures *epochs-to-drain* —
-fused while-loop iterations, ``spec_commits + rollbacks`` when speculating
-— which must fall strictly below the conservative drain at every W while
-the drained bits stay identical; rollbacks are reported alongside.
+fused while-loop iterations, ``(spec_commits + rollbacks) / D`` when
+speculating (the meters count once per device per window) — which must
+fall strictly below the conservative drain at every W while the drained
+bits stay identical; rollbacks are reported alongside.
+The ``it7_per_device_commit`` rung (same draining loads) drives a fixed
+window once under the PR 9 global all-or-nothing vote and once under
+per-device commit, and measures *rolled-back device-windows* — the
+``rollbacks`` counter, one per device per aborted window — which the
+per-device verdict must strictly reduce (or drain in strictly fewer
+iterations) while reaching bit-identical drained state.
 Any rung whose run is unclean (nonzero overflow/causality counter, the full
 :mod:`repro.testing.clean` set) fails the driver with a nonzero exit —
 a perf number from a run that dropped events is not a result.  Draining
@@ -90,7 +97,8 @@ _CHILD = textwrap.dedent("""
                migrate_cap=spec.get("migrate_cap", 16),
                placement_slack=spec.get("placement_slack", 2.0),
                opt_window=spec.get("opt_window", 0),
-               opt_stage_cap=spec.get("opt_stage_cap", 0))
+               opt_stage_cap=spec.get("opt_stage_cap", 0),
+               opt_commit=spec.get("opt_commit", "device"))
     cfg = EngineConfig(**ckw)
     eng = ParsirEngine(model, cfg, mesh=mesh)
     from repro.testing import unclean_counters
@@ -119,7 +127,10 @@ _CHILD = textwrap.dedent("""
             dt = time.perf_counter() - t0
             tot = eng_w.totals(st)
             epochs_run = int(np.asarray(st.epoch)[0])
-            iters = (tot["spec_commits"] + tot["rollbacks"] if W
+            # the commit/rollback meters tick once per device per window
+            # (so their per-device sums equal the fused-loop iteration
+            # count on every device) — normalize totals back to windows.
+            iters = ((tot["spec_commits"] + tot["rollbacks"]) // D if W
                      else epochs_run)
             obj = {k: np.asarray(v) for k, v in
                    eng_w.global_object_state(st).items()}
@@ -155,6 +166,78 @@ _CHILD = textwrap.dedent("""
                           "drained": drained, "bound_hit": not drained,
                           "epochs_run": max(wrec["epochs_run"]
                                             for wrec in windows.values())}))
+        raise SystemExit(0)
+
+    if spec.get("commit_compare"):
+        # per-device-commit rung (PR 10): the SAME draining simulation at a
+        # fixed opt_window, driven once under the PR 9 global all-or-nothing
+        # vote and once under per-device commit.  The honest waste metric is
+        # *rolled-back device-windows* — the rollbacks counter ticks once per
+        # device per aborted window, so under the global vote one straggler
+        # anywhere prices D device-windows of discarded work while the
+        # per-device verdict aborts only the devices a straggler actually
+        # reached.  The verdict must strictly reduce that waste (or, because
+        # committed-early emissions shift later arrival timing, drain in
+        # strictly fewer fused-loop iterations) while the drained object
+        # state stays bit-identical between the two commit modes.
+        E, W = spec["epochs"], spec["opt_window"]
+        recs, base = {}, None
+        for mode in ("global", "device"):
+            eng_m = ParsirEngine(model, EngineConfig(**dict(
+                ckw, opt_window=W, opt_commit=mode)), mesh=mesh)
+            jax.block_until_ready(eng_m.run_until_drained(eng_m.init(), E))
+            st = eng_m.init()                       # measured pass
+            t0 = time.perf_counter()
+            st = eng_m.run_until_drained(st, E)
+            jax.block_until_ready(st)
+            dt = time.perf_counter() - t0
+            tot = eng_m.totals(st)
+            iters = (tot["spec_commits"] + tot["rollbacks"]) // D
+            obj = {k: np.asarray(v) for k, v in
+                   eng_m.global_object_state(st).items()}
+            if base is None:
+                base = dict(n=tot["processed"], obj=obj)
+            else:
+                assert tot["processed"] == base["n"], \
+                    f"{mode} diverged: {tot['processed']} != {base['n']}"
+                for k in obj:
+                    assert np.array_equal(obj[k], base["obj"][k]), \
+                        f"{mode} object state {k!r} diverges from global vote"
+            recs[mode] = {
+                "opt_commit": mode, "opt_window": W,
+                "epochs_to_drain": iters,
+                "epochs_run": int(np.asarray(st.epoch)[0]), "dt": dt,
+                "ev_s": tot["processed"] / dt,
+                "rolled_back_device_windows": tot["rollbacks"],
+                "committed_device_windows": tot["spec_commits"],
+                "speculated": tot["speculated"],
+                "drained": eng_m.in_flight(st) == 0,
+                "unclean": unclean_counters(tot)}
+        g, d = recs["global"], recs["device"]
+        # the strict win is only claimable when the global vote actually
+        # rolled work back (a straggler-free smoke drain has no waste for
+        # the per-device verdict to reduce).
+        if g["rolled_back_device_windows"]:
+            assert (d["rolled_back_device_windows"]
+                    < g["rolled_back_device_windows"]) or \
+                   (d["epochs_to_drain"] < g["epochs_to_drain"]), \
+                (f"per-device commit never won: rolled back "
+                 f"{d['rolled_back_device_windows']} device-windows vs "
+                 f"global {g['rolled_back_device_windows']}, drained in "
+                 f"{d['epochs_to_drain']} iters vs {g['epochs_to_drain']}")
+        bad = {}
+        for rec in recs.values():
+            for k, v in rec["unclean"].items():
+                bad[k] = bad.get(k, 0) + v
+        drained = all(rec["drained"] for rec in recs.values())
+        print(json.dumps({"ev_s": d["ev_s"], "n": base["n"],
+                          "modes": recs, "unclean": bad,
+                          "rollback_reduction":
+                              g["rolled_back_device_windows"]
+                              - d["rolled_back_device_windows"],
+                          "drained": drained, "bound_hit": not drained,
+                          "epochs_run": max(rec["epochs_run"]
+                                            for rec in recs.values())}))
         raise SystemExit(0)
 
     if spec.get("campaign"):
@@ -467,6 +550,13 @@ def build_ladder(workload: str):
                             windows=[0, 1, 2, 4], epochs=256,
                             expect_drained=True,
                             model_kw=dict(max_calls=4))))
+        # the per-device-commit rung (PR 10): the draining simulation at a
+        # fixed window, global all-or-nothing vote vs per-device verdict —
+        # rolled-back device-windows must strictly shrink, bits identical.
+        ladder.append(("it7_per_device_commit",
+                       dict(route="a2a", commit_compare=True, opt_window=2,
+                            epochs=256, expect_drained=True,
+                            model_kw=dict(max_calls=4))))
     if workload == "epidemic":
         # epidemic burns out (finite susceptible pool, absorbing recovered
         # patches) once pop/trans_p stop sustaining the chain — the second,
@@ -477,6 +567,13 @@ def build_ladder(workload: str):
                        dict(route="a2a", speculation=True,
                             windows=[0, 1, 2, 4], o=128, epochs=512,
                             expect_drained=True,
+                            model_kw=dict(pop=8, n_seeds=16, trans_p=96))))
+        # ring-local traffic is the adversarial case for the global vote:
+        # stragglers only cross at patch boundaries, so most windows have a
+        # straggler-free majority the per-device verdict keeps committed.
+        ladder.append(("it7_per_device_commit",
+                       dict(route="a2a", commit_compare=True, opt_window=2,
+                            o=128, epochs=512, expect_drained=True,
                             model_kw=dict(pop=8, n_seeds=16, trans_p=96))))
     ladder.append(("ltf_reference_scheduler",
                    dict(route="a2a", sched="ltf", epochs=10, warm=2)))
@@ -554,6 +651,16 @@ def main():
                       f"dispatches/campaign {disp}  "
                       f"speedup={r['speedup_vs_host_loop']:.2f}x "
                       f"drained={r['drained']} clean={clean}")
+            elif spec.get("commit_compare"):
+                line = "  ".join(
+                    f"{m['opt_commit']}: rb={m['rolled_back_device_windows']}"
+                    f" cm={m['committed_device_windows']}"
+                    f" iters={m['epochs_to_drain']}"
+                    for m in r["modes"].values())
+                print(f"  {r['ev_s']:,.0f} ev/s  {line}  "
+                      f"(-{r['rollback_reduction']} rolled-back "
+                      f"device-windows)  drained={r['drained']} "
+                      f"clean={clean}")
             elif spec.get("speculation"):
                 line = "  ".join(
                     f"W={w['opt_window']}: {w['epochs_to_drain']} iters "

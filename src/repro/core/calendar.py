@@ -225,7 +225,12 @@ def put_buckets(cal: Calendar, first_epoch, shadow: Calendar) -> Calendar:
     Every slot of the window's buckets is overwritten from the shadow —
     speculative insertions vanish, speculative extractions reappear — so the
     calendar is bit-restored to the snapshot point for those epochs.
-    Buckets outside the window are untouched.
+    Buckets outside the window are untouched — the disjointness that makes
+    the restore *local*: under per-device commit (``opt_commit='device'``)
+    only violated devices run it, and a device's rollback can never disturb
+    epochs (its own or anyone else's) outside its window.  Property-tested
+    in tests/test_property.py: take ∘ damage ∘ put is the identity on the
+    window, ring wrap-around included.
     """
     n = shadow.ts.shape[1]
     idx = (first_epoch + jnp.arange(n, dtype=jnp.int32)) % cal.n_buckets

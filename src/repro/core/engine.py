@@ -62,6 +62,7 @@ historical ``repro.core.engine`` imports keep working.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -152,6 +153,10 @@ class ParsirEngine:
         #: fused drains) — the honest dispatches-per-simulation number the
         #: benchmarks report.
         self.dispatches = 0
+        #: lazily compiled drain programs per live window width, used by the
+        #: adaptive-W controller (cfg.opt_adaptive): EngineState layout is
+        #: W-independent, so the same state flows through any variant.
+        self._drain_variants: dict[int, object] = {}
 
         def in_flight_device(s: EngineState) -> jax.Array:
             # the drain predicate's operand: global events still parked in
@@ -226,6 +231,10 @@ class ParsirEngine:
 
         self._drain_sm = jax.jit(
             _shard_map(drain, mesh, (spec, P()), spec), donate_argnums=0)
+        if self._spec_step is not None:
+            # the full-width drain doubles as the adaptive controller's
+            # starting variant — no duplicate compile for w == opt_window.
+            self._drain_variants[cfg.opt_window] = self._drain_sm
 
         def drain_replicated(state: EngineState,
                              max_epochs: jax.Array) -> EngineState:
@@ -381,8 +390,9 @@ class ParsirEngine:
                                       max_epochs: jax.Array) -> EngineState:
                     # Per-rep epoch bounds as in the vmapped drain; the cond
                     # stays local (the AXIS collectives inside the spec step
-                    # — the V psum included — are single-member no-ops, so
-                    # V is this replication's own verdict and each device's
+                    # — the verdict all_gather included — are single-member
+                    # no-ops, so the [D, 2] verdict table collapses to this
+                    # replication's own [m_local, v_local] and each device's
                     # loop still exits at its own local drain epoch).
                     bounds_r = state.epoch[:, 0] + max_epochs   # i32 [R/W]
                     vstep = jax.vmap(self._spec_step)
@@ -578,10 +588,99 @@ class ParsirEngine:
         event population dies out (absorbing networks, exhausted budgets)
         without guessing an epoch count — and without paying per-chunk
         host dispatch.
+
+        With ``cfg.opt_adaptive`` the drain runs in chunks through the
+        adaptive-W controller instead of one fused dispatch: between chunks
+        the host reads the observed ``rollbacks / spec_commits`` ratio and
+        retunes the live window (``cfg.opt_window`` is the cap) — see
+        :meth:`_run_drain_adaptive`.
         """
         self.check_stats_bound(max_epochs)
+        if self.cfg.opt_adaptive and self.cfg.opt_window > 0:
+            return self._run_drain_adaptive(state, max_epochs)
         self.dispatches += 1
         return self._drain_sm(state, jnp.int32(max_epochs))
+
+    def _drain_variant(self, w: int):
+        """The compiled fused-drain program for a live window width ``w``.
+
+        Built (and cached) lazily: ``EngineState`` carries nothing W-shaped
+        — the shadow copies live inside the step body — so the identical
+        state flows through any variant and switching widths between chunks
+        costs one compile per distinct width, ever.
+        """
+        if w not in self._drain_variants:
+            cfg_w = dataclasses.replace(self.cfg, opt_window=w,
+                                        opt_adaptive=False)
+            step_w = make_spec_step(self.model, cfg_w, self.placement)
+
+            def drain(state: EngineState, max_epochs: jax.Array) -> EngineState:
+                bound = state.epoch[0] + max_epochs
+
+                def in_flight_device(s: EngineState) -> jax.Array:
+                    local = (jnp.sum(s.cal.cnt)
+                             + jnp.sum(s.fb.events.valid.astype(jnp.int32)))
+                    return jax.lax.psum(local, AXIS)
+
+                def cond(carry):
+                    s, pending = carry
+                    return (pending > 0) & (s.epoch[0] < bound)
+
+                def body(carry):
+                    s, _ = carry
+                    s = step_w(s, bound)
+                    return s, in_flight_device(s)
+
+                s, _ = jax.lax.while_loop(
+                    cond, body, (state, in_flight_device(state)))
+                return s
+
+            spec = P(AXIS)
+            self._drain_variants[w] = jax.jit(
+                _shard_map(drain, self.mesh, (spec, P()), spec),
+                donate_argnums=0)
+        return self._drain_variants[w]
+
+    def _run_drain_adaptive(self, state: EngineState,
+                            max_epochs: int) -> EngineState:
+        """Host-side adaptive-W drain: chunked dispatches, retuned between.
+
+        Policy: after each chunk, read the chunk's rollback ratio
+        ``rollbacks / (rollbacks + spec_commits)`` from the in-carry meters.
+        Above 1/2 the window is mostly wasted work — shrink it (floor 1);
+        below 1/10 stragglers are rare — grow it (cap ``cfg.opt_window``).
+        Purely schedule-level control: any W sequence drains to the same
+        bits (each chunk is itself a bit-exact fused drain), so the
+        controller needs no correctness reasoning, only taste.  Each chunk
+        is one honest host dispatch (``self.dispatches`` counts them).
+        """
+        W0 = self.cfg.opt_window
+        w = W0
+        # a chunk must be long enough to observe several windows at the
+        # widest width, short enough to react — a few windows' worth.
+        chunk = max(8, 4 * (W0 + 1))
+        tot = self.totals(state)
+        prev_cm, prev_rb = tot["spec_commits"], tot["rollbacks"]
+        start_epoch = int(np.asarray(state.epoch)[0])
+        while True:
+            epochs_run = int(np.asarray(state.epoch)[0]) - start_epoch
+            n = min(chunk, int(max_epochs) - epochs_run)
+            self.dispatches += 1
+            state = self._drain_variant(w)(state, jnp.int32(max(n, 0)))
+            epochs_run = int(np.asarray(state.epoch)[0]) - start_epoch
+            if (epochs_run >= int(max_epochs) or n <= 0
+                    or self.in_flight(state) == 0):
+                return state
+            tot = self.totals(state)
+            d_cm = tot["spec_commits"] - prev_cm
+            d_rb = tot["rollbacks"] - prev_rb
+            prev_cm, prev_rb = tot["spec_commits"], tot["rollbacks"]
+            if d_cm + d_rb:
+                ratio = d_rb / (d_rb + d_cm)
+                if ratio > 0.5 and w > 1:
+                    w -= 1
+                elif ratio < 0.1 and w < W0:
+                    w += 1
 
     def run_replicated_drained(self, state: EngineState,
                                max_epochs: int) -> EngineState:

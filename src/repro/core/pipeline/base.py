@@ -185,6 +185,21 @@ class Router(abc.ABC):
                  cfg: "EngineConfig") -> EventBatch:
         """Run the collective; return the events visible to this device."""
 
+    def sender_ids(self, placement: Placement, cfg: "EngineConfig"
+                   ) -> jax.Array:
+        """Source device of each slot in an :meth:`exchange` output batch.
+
+        A static i32 vector matching the exchange output's slot count —
+        both built-in exchanges pack by source positionally, so provenance
+        is recoverable without widening the event record.  The speculation
+        stage uses it to filter speculative arrivals by the *sender's*
+        commit verdict (``opt_commit='device'``); a custom router must
+        override this to compose with per-device commit.
+        """
+        raise NotImplementedError(
+            f"router {self.name!r} does not expose sender identity; "
+            "override sender_ids() to compose with opt_commit='device'")
+
 
 class StealPolicy(abc.ABC):
     """Load-balancing strategy (pipeline stage 2, paper §II-A)."""

@@ -88,12 +88,14 @@ class EngineConfig:
     ``opt_window``          epochs; default 0 (strictly conservative);
                             >= 0.  W > 0 speculates up to W epochs past
                             the safe horizon against a shadow copy and
-                            rolls the window back on any straggler
+                            rolls violated windows back on stragglers
                             (Time Warp lite — schedule-only, same bits).
-                            Requires n_buckets >= W + 2; incompatible
-                            with steal=True and placement='adaptive'
-                            (both rejected fail-fast: loans and row
-                            migration would escape the shadow copy).
+                            Requires n_buckets >= W + 2.  Composes with
+                            placement='adaptive' (windows are clamped to
+                            stop short of rebalance firing epochs) and
+                            with steal=True (which requires
+                            opt_commit='global' — loans execute on the
+                            borrower, so the verdict must be atomic).
     ``opt_stage_cap``       events per device; default 0 → route_cap;
                             >= 1 when speculating (0 otherwise).
                             Staging buffer for speculative emissions
@@ -101,6 +103,25 @@ class EngineConfig:
                             or beyond the shadow window); overflow
                             aborts the window — counted as a rollback,
                             never as a drop.
+    ``opt_commit``          default ``"device"``; {device, global}; only
+                            with opt_window > 0.  Commit locality:
+                            'device' rolls back only devices that
+                            received a straggler (horizon-guarded, see
+                            pipeline/speculate.py); 'global' is the
+                            atomic all-or-nothing vote.  Schedule-only:
+                            identical bits either way.
+    ``opt_adaptive``        bool; default False; only with opt_window
+                            > 0.  Host-side controller retunes the live
+                            window between drain dispatches from the
+                            observed rollbacks/spec_commits ratio
+                            (opt_window becomes the cap).  Schedule-
+                            only: any W sequence yields the same bits.
+    ``inject_straggler_every``  windows; default 0 (off); only with
+                            opt_window > 0.  Test-only determinism
+                            harness: every n-th window is forced down
+                            the rollback path on every device.  Only
+                            the ``rollbacks`` activity meter (never a
+                            clean counter) observes it.
     ======================  =============================================
     """
 
@@ -130,6 +151,12 @@ class EngineConfig:
     opt_window: int = 0              # speculation window W (0 = conservative)
     opt_stage_cap: int = 0           # speculative-emission staging buffer
     #                                  (0 → route_cap when speculating)
+    opt_commit: str = "device"       # commit locality: device (only violated
+    #                                  devices roll back) | global (atomic)
+    opt_adaptive: bool = False       # host-side live-W controller (W = cap)
+    inject_straggler_every: int = 0  # test-only: force every n-th window to
+    #                                  abort (0 = off; deterministic rollback
+    #                                  coverage at any device count)
 
     def __post_init__(self):
         if self.lookahead <= 0:
@@ -175,22 +202,26 @@ class EngineConfig:
         if self.opt_window < 0:
             raise ValueError(
                 f"opt_window must be >= 0, got {self.opt_window}")
+        if self.opt_commit not in ("device", "global"):
+            raise ValueError(
+                f"unknown opt_commit {self.opt_commit!r} "
+                "(choose from ['device', 'global'])")
         if self.opt_window > 0:
-            if self.steal:
-                # a loaned batch is processed (and its state returned) by a
-                # non-owner; the owner's shadow copy could not cover it, so a
-                # rollback would lose the loan's effects.
+            if self.steal and self.opt_commit != "global":
+                # a loaned batch executes on the borrower: a split verdict
+                # could commit the borrower's staged loan emissions while
+                # the aborting owner re-executes the loaned batch — the
+                # same events delivered twice.  The atomic vote keeps loan
+                # effects and their rollback in lockstep.
                 raise ValueError(
-                    "opt_window > 0 is incompatible with steal=True — loaned "
-                    "batches execute outside the owner's shadow copy and "
-                    "could not be rolled back; disable stealing to speculate")
-            if self.placement == "adaptive":
-                # rebalancing migrates whole calendar rows mid-window; the
-                # O(W) bucket shadow cannot follow ownership moves.
+                    "steal=True with opt_window > 0 requires "
+                    "opt_commit='global' — loaned batches execute on the "
+                    "borrower, so a per-device verdict could commit a "
+                    "loan's emissions while its owner rolls back")
+            if self.inject_straggler_every < 0:
                 raise ValueError(
-                    "opt_window > 0 is incompatible with placement="
-                    "'adaptive' — row migration would escape the window's "
-                    "shadow copy; use placement='equal' or 'weighted'")
+                    f"inject_straggler_every must be >= 0, got "
+                    f"{self.inject_straggler_every}")
             if self.n_buckets < self.opt_window + 2:
                 raise ValueError(
                     f"opt_window={self.opt_window} needs n_buckets >= "
@@ -203,10 +234,27 @@ class EngineConfig:
                 raise ValueError(
                     f"opt_stage_cap must be >= 1 when speculating, got "
                     f"{self.opt_stage_cap}")
-        elif self.opt_stage_cap:
-            raise ValueError(
-                f"opt_stage_cap={self.opt_stage_cap} only applies with "
-                f"opt_window > 0 — it would silently do nothing")
+        else:
+            # dead speculation knobs with W == 0 are rejected, not ignored:
+            # a config that *looks* speculative but isn't would silently
+            # change nothing.
+            if self.opt_stage_cap:
+                raise ValueError(
+                    f"opt_stage_cap={self.opt_stage_cap} only applies with "
+                    f"opt_window > 0 — it would silently do nothing")
+            if self.opt_commit != "device":
+                raise ValueError(
+                    f"opt_commit={self.opt_commit!r} only applies with "
+                    f"opt_window > 0 — it would silently do nothing")
+            if self.opt_adaptive:
+                raise ValueError(
+                    "opt_adaptive=True only applies with opt_window > 0 — "
+                    "the controller needs a window cap to tune under")
+            if self.inject_straggler_every:
+                raise ValueError(
+                    f"inject_straggler_every={self.inject_straggler_every} "
+                    "only applies with opt_window > 0 — there is no window "
+                    "to abort")
 
         # stage-name validation against the registries (populated on package
         # import; imported lazily here so config stays cycle-free).

@@ -34,4 +34,7 @@ PLACEMENTS: tuple[str, ...] = ("equal", "weighted", "adaptive")
 #: flag by the simulate driver — :mod:`repro.testing.docs_check` derives the
 #: required flag names from this tuple, so a new speculation knob that never
 #: reaches the CLI fails the docs job.
-SPECULATION_KNOBS: tuple[str, ...] = ("opt_window", "opt_stage_cap")
+#: (``inject_straggler_every`` is deliberately absent: it is a test-only
+#: determinism harness, not a user-facing speculation knob.)
+SPECULATION_KNOBS: tuple[str, ...] = ("opt_window", "opt_stage_cap",
+                                      "opt_commit", "opt_adaptive")

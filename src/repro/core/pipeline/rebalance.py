@@ -36,6 +36,16 @@ move — the routers are the migration path for everything not yet delivered.
 
 The stage fires between process and route, so the epoch's fresh emissions are
 routed against the new boundaries immediately.
+
+Composition with speculation (``opt_window > 0``, pipeline/speculate.py):
+sound under BOTH commit modes, because the speculation stage only ever lets
+this stage fire at the *safe* epoch — the window is clamped so no
+speculative sub-epoch lands on or leaps over a firing epoch (a migration
+moves calendar rows wholesale, which no shadow copy could restore on a
+remote device).  Every firing therefore runs exactly as it would in the
+conservative step: replicated boundary computation, committed state, no
+shadow to reconcile.  The boundaries/load carried through the window commit
+only on the window's own verdict.
 """
 from __future__ import annotations
 

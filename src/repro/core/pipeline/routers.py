@@ -46,6 +46,13 @@ class AllGatherRouter(Router):
         g = jax.tree.map(lambda x: jax.lax.all_gather(x, AXIS), buf)
         return EventBatch(*(x.reshape(-1) for x in g))
 
+    def sender_ids(self, placement, cfg):
+        # broadcast layout: D stacked route buffers, route_cap slots each.
+        D = placement.n_devices
+        if D == 1:
+            return jnp.zeros((cfg.route_cap,), jnp.int32)
+        return jnp.repeat(jnp.arange(D, dtype=jnp.int32), cfg.route_cap)
+
 
 @register_router("a2a")
 class AllToAllRouter(Router):
@@ -102,3 +109,10 @@ class AllToAllRouter(Router):
             lambda x: jax.lax.all_to_all(x, AXIS, split_axis=0, concat_axis=0,
                                          tiled=True), shaped)
         return EventBatch(*(x.reshape(-1) for x in recv))
+
+    def sender_ids(self, placement, cfg):
+        # after all_to_all, dim 0 of the [D, pair_cap] view is the source.
+        D = placement.n_devices
+        if D == 1:
+            return jnp.zeros((cfg.route_cap,), jnp.int32)
+        return jnp.repeat(jnp.arange(D, dtype=jnp.int32), cfg.route_cap // D)

@@ -5,58 +5,102 @@ With ``EngineConfig.opt_window = W > 0`` one step commits the *safe* epoch
 a shadow copy of the touched state — the per-object state pytree plus the
 ``W`` calendar buckets of the window (O(W) rows per object, via
 :func:`repro.core.calendar.take_buckets` / ``put_buckets``, the epoch-axis
-complement of the PR 3 row-migration machinery).  The window is **globally
-atomic**: straggler detection happens at route/deliver time (any arriving
-event whose epoch falls inside the already-speculated window, on any
-device), the violation count is psum-reduced, and a nonzero count rolls
-*every* device back to its shadow before the epochs are re-processed
-conservatively on later steps.  Commit or abort, the drained state is
-bit-exact with the conservative path — same golden digests; the conformance
-sweep's ``speculation`` axis is the proof.
+complement of the PR 3 row-migration machinery).  Straggler detection
+happens at route/deliver time: any arriving event whose epoch falls inside
+the already-speculated window is a violation at the *receiving* device.
 
-Why the whole window, not per-object rollback: objects consume each other's
-*speculative* emissions inside the window (that is the point — intra-window
-event chains are what a pure leap would stall on), and calendar slots carry
-no provenance, so invalidating one object would require tracing a cascade
-the dataflow no longer records.  Aborting the window wholesale needs no
-anti-messages and no provenance: speculative emissions are either parked in
-a staging buffer (remote dst, or local beyond the window) or inserted into
-shadowed buckets, so discarding staging + restoring the shadow erases every
-speculative effect exactly.
+**Commit locality** (``opt_commit``).  With ``"global"`` the window is
+globally atomic: one replicated verdict, every device commits or rolls back
+together (PR 9 semantics, bit-for-bit).  With ``"device"`` (the default)
+each device decides alone — a device keeps its speculated window iff
 
-The step body, in order (collectives never inside a branch):
+  * it received no straggler itself (``v_local == 0``), **and**
+  * its window does not outrun the earliest straggler *anywhere*
+    (``e0 + W_eff <= m_global``, the horizon guard).
 
-  1. **safe sub-epoch** ``e0`` — extract, process; local emissions (and
-     local fallback re-offers) deliver immediately; remote in-horizon
-     emissions enter the safe route buffer; the fallback is rebuilt.  All
-     of this is committed regardless of the window's fate.
-  2. **shadow** — snapshot object state + window buckets ``e0+1 .. e0+W``.
-  3. **speculative sub-epochs** ``e0+w``, ``w = 1 .. W_eff`` (``W_eff``
-     clamps the window to the run bound) — extract, process; emissions with
-     local dst inside the shadowed window deliver immediately (feeding
-     later sub-epochs); everything else (remote, or local beyond the
-     window) parks in the staging buffer.  The fallback is never touched.
+The horizon guard is what makes local verdicts sound.  A violated device
+restores its shadow and re-executes ``e0+1 ..`` conservatively; its
+re-execution can diverge from round 1 only at epochs ``>= m_global`` (below
+that, the restored state and the absence of sub-``m_global`` arrivals make
+re-processing bit-identical — counter-based RNG), so divergent emissions
+land at epochs ``>= m_global + 1 >`` every keeper's committed horizon.  The
+bit-identical re-emissions below that are *re-sent* — so keepers filter the
+speculative exchange by sender: an aborting sender's round-1 speculative
+arrivals are dropped everywhere (``keep_vec[sender_ids]``) and arrive
+exactly once via the re-execution.  Conversely a keeper's committed
+speculative emissions are delivered even on the abort branch (the keeper
+never re-sends them); they carry epochs beyond the restored window's drain
+point, so the violated receiver simply re-processes them with the straggler
+included.  Staging/route overflow on the speculative path contributes a
+violation *at the sender* with horizon ``e0 + 1`` — the sender re-emits
+conservatively and no keeper can have outrun the lost event (speculative
+emissions carry epochs ``>= e0 + 2``).
+
+Mixed verdicts advance the *replicated* epoch by 1 (a keeper re-walks its
+committed epochs as empty-bucket no-ops) and keepers deliver at ``cur =
+e0`` — their arrivals all carry epochs past the window (``v_local == 0``),
+so nothing is late and anything beyond the ring horizon parks in the
+fallback.  Only a unanimous commit leaps the epoch by ``W_eff + 1``.
+
+Why the whole window per device, not per-object rollback: objects consume
+each other's *speculative* emissions inside the window (that is the point —
+intra-window event chains are what a pure leap would stall on), and
+calendar slots carry no provenance, so invalidating one object would
+require tracing a cascade the dataflow no longer records.  Aborting a
+device's window wholesale needs no anti-messages: speculative emissions are
+either parked in a staging buffer (remote dst, or local beyond the window)
+or inserted into shadowed buckets, so discarding staging + restoring the
+shadow erases every local speculative effect exactly.
+
+**Compositions.**  ``steal=True`` runs the loan policy in the safe epoch
+*and* the sub-epochs (the loan collectives sit under a replicated-predicate
+``lax.cond``, the same discipline as the adaptive rebalancer) but requires
+``opt_commit='global'``: a loaned batch executes on the borrower, so a
+split verdict could commit the borrower's staged loan emissions while the
+aborting owner re-executes the loaned batch — duplicates.  Globally atomic
+commit keeps loan effects and their rollback in lockstep.
+``placement='adaptive'`` composes with either commit mode: the rebalance
+stage fires only in the (always-committed) safe section, and ``W_eff`` is
+clamped so no speculative epoch lands on or leaps a firing epoch — every
+firing executes as a safe epoch, exactly as the conservative engine would.
+
+**Determinism harness.**  ``inject_straggler_every = n`` forces every
+``n``-th window (counted per device; the count is replicated in value) to
+abort by synthesizing a violation at ``e0 + 1`` on every device — the
+rollback/restore branch becomes deterministically reachable at D=1 in
+tier-1 tests.  The injection is schedule-only (abort is the conservative
+path) and touches only the ``rollbacks`` activity meter.
+
+The step body, in order (collectives never inside the commit/abort
+branches; the loan/rebalance collectives run under replicated predicates):
+
+  1. **safe sub-epoch** ``e0`` — extract, steal + process via the
+     configured policy, rebalance (adaptive placement; fresh emissions are
+     routed against the new boundaries), route/deliver.  All of this is
+     committed regardless of the window's fate.
+  2. **shadow** — snapshot object state + window buckets ``e0+1 .. e0+W``
+     (post-rebalance, so a restore never undoes a migration).
+  3. **speculative sub-epochs** ``e0+w``, ``w = 1 .. W_eff`` — extract,
+     steal + process; emissions with local dst inside the shadowed window
+     deliver immediately (feeding later sub-epochs); everything else
+     (remote, or local beyond the window) parks in the staging buffer.
   4. **two exchanges** — the safe buffer (must-keep: delivered in both
-     branches) and the staged remote in-horizon events (delivered on
-     commit, discarded wholesale on abort).  Two collectives instead of one
-     is what makes abort possible without anti-messages.
-  5. **violation count** — arrivals (either exchange) whose epoch is
-     ``<= e0 + W_eff``, plus staging/spec-route overflow (an event the
-     speculative path couldn't carry must not be *delayed* into lateness —
-     aborting re-emits it conservatively).  psum → identical verdict
-     everywhere.
-  6. **commit** (V == 0): keep speculated calendar/state, deliver both
-     arrival sets and the staged leftovers at ``cur = e0 + W_eff``,
-     advance the epoch by ``W_eff + 1``, fold the speculative Stats deltas
-     in (``speculated += ``, ``spec_commits += 1``).
-     **abort** (V > 0): restore the shadow, deliver only the safe arrivals
-     at ``cur = e0``, advance by 1, discard every speculative delta
-     (``rollbacks += 1``).  Progress is guaranteed: the safe epoch commits
+     branches) and the staged remote in-horizon events (sender-filtered by
+     the verdict).  Two collectives instead of one is what makes abort
+     possible without anti-messages.
+  5. **verdict** — one ``all_gather`` of ``[m_local, v_local]`` (earliest
+     in-window arrival epoch, violation count) replicates every device's
+     verdict inputs; ``keep_d`` / ``keep_vec`` derive locally.
+  6. **per-device commit or abort** — ``lax.cond(keep_d, commit, abort)``
+     with local ops only.  Progress is guaranteed: the safe epoch commits
      either way, so a workload with constant cross-device traffic degrades
      to conservative speed — never to livelock, and never to wrong bits.
 
 ``rollbacks`` / ``speculated`` / ``spec_commits`` are activity meters, not
-error counters — deliberately absent from ``CLEAN_COUNTERS``.
+error counters — deliberately absent from ``CLEAN_COUNTERS``.  Every
+device increments exactly one of ``spec_commits`` / ``rollbacks`` per
+window, so per device (and divided by D across devices) their sum equals
+the fused-loop iteration count.
 """
 from __future__ import annotations
 
@@ -71,11 +115,14 @@ from ..calendar import (Fallback, extract_sorted, fallback_put, insert,
 from ..events import (EventBatch, compact, compact_mask, concat_batches,
                       empty_batch, truncate)
 from ..placement import Placement
-from . import routers, schedulers  # noqa: F401  (registration imports)
-from .base import (AXIS, EngineState, epoch_of, resolve_router,
-                   resolve_scheduler)
+from . import rebalance, routers, schedulers, steal  # noqa: F401  (registration imports)
+from .base import (AXIS, EngineState, epoch_of, resolve_rebalance,
+                   resolve_router, resolve_scheduler, resolve_steal)
 from .config import EngineConfig
 from .deliver import deliver
+
+#: "no in-window arrival" marker for the per-device earliest-straggler epoch.
+NO_STRAGGLER = jnp.iinfo(jnp.int32).max
 
 
 def _stage_put(staging: EventBatch, new: EventBatch):
@@ -109,21 +156,44 @@ def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
 
     scheduler = resolve_scheduler(cfg)
     router = resolve_router(cfg.route)
+    policy = resolve_steal(cfg, D)
+    rebalancer = resolve_rebalance(cfg)
+    adaptive = cfg.placement == "adaptive"
+    per_device = cfg.opt_commit == "device"
+    inject = cfg.inject_straggler_every
     scheduler.validate(model, cfg)
     router.validate(cfg, placement)
+    senders = router.sender_ids(placement, cfg)
 
     def step(state: EngineState, bound: jax.Array) -> EngineState:
         dev = jax.lax.axis_index(AXIS)
         e0 = state.epoch[0]
         pl = placement.with_boundaries(state.bounds[0])
-        boundaries = jnp.asarray(pl.boundaries, jnp.int32)
         w_eff = jnp.clip(bound - 1 - e0, 0, W)
+        if adaptive:
+            # never speculate onto (or leap over) a rebalance firing epoch:
+            # firings run only in the safe section, so the window must stop
+            # short of the next epoch with (e + 1) % R == 0.
+            R = cfg.rebalance_every
+            d_fire = (R - 1 - (e0 % R)) % R
+            w_eff = jnp.minimum(
+                w_eff, jnp.where(d_fire == 0, R - 1, d_fire - 1))
 
         # -- 1. safe sub-epoch e0 (committed in both branches) --------------
         cal, ts_s, seed_s, pay_s, cnt_b = extract_sorted(state.cal, e0)
-        obj, out_flat, lv0 = scheduler.process(model, cfg, state.obj,
-                                               ts_s, seed_s, pay_s, cnt_b)
-        proc0 = jnp.sum(cnt_b)
+        obj, out_flat, lv0, stolen0, proc0 = policy.process(
+            model, scheduler, cfg, pl, dev, state.obj,
+            ts_s, seed_s, pay_s, cnt_b)
+
+        if adaptive:
+            load = state.load + cnt_b
+            bounds, load, cal, obj, migrated, fired = rebalancer.rebalance(
+                cfg, placement, dev, e0, state.bounds[0], load, cal, obj)
+            pl = placement.with_boundaries(bounds)
+        else:
+            bounds, load = state.bounds[0], state.load
+            migrated = fired = jnp.int32(0)
+        boundaries = jnp.asarray(pl.boundaries, jnp.int32)
 
         prod = concat_batches(out_flat, state.fb.events)
         ep_p = epoch_of(prod.ts, cfg.epoch_len)
@@ -156,18 +226,20 @@ def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
         zero = jnp.int32(0)
         staging = empty_batch(cfg.opt_stage_cap)
         # (cal, obj, staging, processed, lookahead, late, oob, cal_ovf,
-        #  stage_ovf) — stage_ovf feeds the violation count, the rest are
-        # Stats deltas applied only on commit.
-        carry = (cal, obj, staging, zero, zero, zero, zero, zero, zero)
+        #  stage_ovf, stolen, load) — stage_ovf feeds the violation count,
+        # the rest are Stats/load deltas applied only on commit.
+        carry = (cal, obj, staging, zero, zero, zero, zero, zero, zero,
+                 zero, jnp.zeros_like(load))
 
         def sub_epoch(w):
             def run(c):
-                cal, obj, staging, proc, lv, late, oob, covf, sovf = c
+                (cal, obj, staging, proc, lv, late, oob, covf, sovf,
+                 stl, ld) = c
                 cur = e0 + w
                 cal, ts_w, seed_w, pay_w, cnt_w = extract_sorted(cal, cur)
-                obj, out_w, lv_w = scheduler.process(model, cfg, obj,
-                                                     ts_w, seed_w, pay_w,
-                                                     cnt_w)
+                obj, out_w, lv_w, stl_w, proc_w = policy.process(
+                    model, scheduler, cfg, pl, dev, obj,
+                    ts_w, seed_w, pay_w, cnt_w)
                 ep_w = epoch_of(out_w.ts, cfg.epoch_len)
                 oob_w = out_w.valid & ((out_w.dst < 0) | (out_w.dst >= O))
                 late_w = out_w.valid & ~oob_w & (ep_w <= cur)
@@ -181,16 +253,17 @@ def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
                                      out_w.payload, ins)
                 staging, sovf_w = _stage_put(
                     staging, compact_mask(out_w, good_w & ~ins))
-                return (cal, obj, staging, proc + jnp.sum(cnt_w), lv + lv_w,
+                return (cal, obj, staging, proc + proc_w, lv + lv_w,
                         late + jnp.sum(late_w.astype(jnp.int32)),
                         oob + jnp.sum(oob_w.astype(jnp.int32)),
-                        covf + covf_w, sovf + sovf_w)
+                        covf + covf_w, sovf + sovf_w, stl + stl_w,
+                        ld + cnt_w)
             return run
 
         for w in range(1, W + 1):
             carry = jax.lax.cond(w <= w_eff, sub_epoch(w), lambda c: c, carry)
         (cal_sp, obj_sp, staging, spec_proc, spec_lv, spec_late, spec_oob,
-         spec_covf, stage_ovf) = carry
+         spec_covf, stage_ovf, spec_stolen, load_sp) = carry
 
         # -- 4. the two exchanges (unconditional: collectives stay out of
         #       the commit/abort branches) ---------------------------------
@@ -206,28 +279,69 @@ def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
             staging, spec_eligible, pl, cfg)
         routed_spec = router.exchange(spec_buf, pl, cfg)
 
-        # -- 5. straggler detection: psum-replicated verdict ----------------
-        def violations(batch: EventBatch) -> jax.Array:
+        # -- 5. verdict: (earliest straggler epoch, violation count) --------
+        def violations(batch: EventBatch):
             ep = epoch_of(batch.ts, cfg.epoch_len)
             mine = (batch.valid & (batch.dst >= 0) & (batch.dst < O)
                     & (pl.owner(batch.dst) == dev))
-            return jnp.sum((mine & (ep <= e0 + w_eff)).astype(jnp.int32))
+            viol = mine & (ep <= e0 + w_eff)
+            return (jnp.sum(viol.astype(jnp.int32)),
+                    jnp.min(jnp.where(viol, ep, NO_STRAGGLER)))
 
-        # a staged/spec-routed event the buffers couldn't carry must abort:
-        # parking it for a later epoch could make it LATE (dropped), and a
-        # conservative engine never drops — the abort re-emits it instead.
-        v_local = (violations(routed_safe) + violations(routed_spec)
-                   + stage_ovf + spec_route_ovf)
-        V = jax.lax.psum(v_local, AXIS)
+        # a staged/spec-routed event the buffers couldn't carry must abort
+        # *its sender*: parking it for a later epoch could make it LATE
+        # (dropped), and a conservative engine never drops — the abort
+        # re-emits it.  Its horizon contribution is e0+1 (conservative: the
+        # lost events themselves carry epochs >= e0+2).
+        cnt_sf, m_sf = violations(routed_safe)
+        cnt_sp, m_sp = violations(routed_spec)
+        v_local = cnt_sf + cnt_sp + stage_ovf + spec_route_ovf
+        m_local = jnp.minimum(m_sf, m_sp)
+        m_local = jnp.where(stage_ovf + spec_route_ovf > 0,
+                            jnp.minimum(m_local, e0 + 1), m_local)
+
+        if inject > 0:
+            # deterministic straggler injection: every inject-th window is
+            # forced down the abort path on every device (the count below is
+            # replicated in value — each device resolves one verdict per
+            # window).  Schedule-only: abort IS the conservative path.
+            windows = state.stats.spec_commits[0] + state.stats.rollbacks[0]
+            fire_inj = (windows % inject == inject - 1) & (w_eff > 0)
+            v_local = v_local + jnp.where(fire_inj, 1, 0).astype(jnp.int32)
+            m_local = jnp.where(fire_inj, jnp.minimum(m_local, e0 + 1),
+                                m_local)
+
+        g = jax.lax.all_gather(jnp.stack([m_local, v_local]), AXIS)  # [D, 2]
+        m_global = jnp.min(g[:, 0])
+        all_commit = m_global == NO_STRAGGLER
+        if per_device:
+            keep_vec = (g[:, 1] == 0) & (e0 + w_eff <= m_global)
+            keep_d = (v_local == 0) & (e0 + w_eff <= m_global)
+        else:
+            keep_vec = jnp.broadcast_to(all_commit, (g.shape[0],))
+            keep_d = all_commit
+
+        # replicated across devices even when verdicts differ: a mixed
+        # verdict advances by 1 (keepers re-walk committed epochs as empty
+        # no-ops) and keepers deliver at cur = e0 — their arrivals are all
+        # past the window (v_local == 0), so nothing lands late and
+        # beyond-horizon arrivals park in the fallback.
+        e_next = jnp.where(all_commit, e0 + w_eff + 1, e0 + 1)
+        cur_c = jnp.where(all_commit, e0 + w_eff, e0)
+
+        # speculative arrivals filtered by the *sender's* verdict: an
+        # aborting sender re-executes and re-sends (drop round 1 here); a
+        # keeper never re-sends (deliver round 1, even into an abort).
+        spec_arrivals = routed_spec._replace(
+            valid=routed_spec.valid & keep_vec[senders])
 
         # -- 6. commit or roll back (local ops only) ------------------------
         def commit(_):
-            cur_c = e0 + w_eff
             c, f, co1, fo1, l1, _ = deliver(
                 cal_sp, fb, routed_safe, cur_c, dev, pl, cfg, init=False,
                 replicated=router.replicated)
             c, f, co2, fo2, l2, _ = deliver(
-                c, f, routed_spec, cur_c, dev, pl, cfg, init=False,
+                c, f, spec_arrivals, cur_c, dev, pl, cfg, init=False,
                 replicated=router.replicated)
             # staged leftovers: local beyond the window → deliver (insert or
             # park); remote beyond the post-commit horizon → fallback, to
@@ -241,26 +355,31 @@ def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
                 f, staging._replace(valid=leftover & ~lo_local))
             deltas = (spec_proc, spec_lv, spec_late, spec_oob,
                       spec_covf + co1 + co2 + co3, fo1 + fo2 + fo3 + fo4,
-                      l1 + l2 + l3, zero,
-                      jnp.where(dev == 0, 1, 0).astype(jnp.int32),
-                      spec_proc)
-            return c, f, obj_sp, e0 + w_eff + 1, deltas
+                      l1 + l2 + l3, zero, jnp.int32(1), spec_proc,
+                      spec_stolen, load_sp)
+            return c, f, obj_sp, deltas
 
         def abort(_):
             c = put_buckets(cal_sp, e0 + 1, shadow_cal)
-            c, f, co, fo, l, _ = deliver(
-                c, fb, routed_safe, e0, dev, pl, cfg, init=False,
+            c, f, co1, fo1, l1, _ = deliver(
+                c, fb, routed_safe, cur_c, dev, pl, cfg, init=False,
                 replicated=router.replicated)
-            deltas = (zero, zero, zero, zero, co, fo, l,
-                      jnp.where(dev == 0, 1, 0).astype(jnp.int32),
-                      zero, zero)
-            return c, f, shadow_obj, e0 + 1, deltas
+            # keepers' committed speculative emissions still arrive (they
+            # are never re-sent): epochs >= e0+2, into the restored ring.
+            c, f, co2, fo2, l2, _ = deliver(
+                c, f, spec_arrivals, cur_c, dev, pl, cfg, init=False,
+                replicated=router.replicated)
+            deltas = (zero, zero, zero, zero, co1 + co2, fo1 + fo2, l1 + l2,
+                      jnp.int32(1), zero, zero, zero,
+                      jnp.zeros_like(load_sp))
+            return c, f, shadow_obj, deltas
 
-        cal_f, fb_f, obj_f, e_next, deltas = jax.lax.cond(
-            V == 0, commit, abort, None)
+        cal_f, fb_f, obj_f, deltas = jax.lax.cond(
+            keep_d, commit, abort, None)
         (d_proc, d_lv, d_late, d_oob, d_covf, d_fovf, d_l2,
-         d_rb, d_cm, d_spec) = deltas
+         d_rb, d_cm, d_spec, d_stolen, d_load) = deltas
 
+        load_f = load + d_load if adaptive else load
         st = state.stats
         stats = st._replace(
             processed=st.processed + proc0 + d_proc,
@@ -269,13 +388,16 @@ def make_spec_step(model: SimModel, cfg: EngineConfig, placement: Placement
             route_overflow=st.route_overflow + route_ovf0,
             late_events=st.late_events + n_late0 + late0b + d_late + d_l2,
             lookahead_violations=st.lookahead_violations + lv0 + d_lv,
+            stolen=st.stolen + stolen0 + d_stolen,
             oob_events=st.oob_events + n_oob0 + d_oob,
+            rebalances=st.rebalances + fired,
+            migrated=st.migrated + migrated,
             rollbacks=st.rollbacks + d_rb,
             speculated=st.speculated + d_spec,
             spec_commits=st.spec_commits + d_cm,
         )
         return EngineState(cal_f, fb_f, obj_f,
                            jnp.reshape(e_next, state.epoch.shape), stats,
-                           state.bounds, state.load)
+                           bounds[None, :], load_f)
 
     return step

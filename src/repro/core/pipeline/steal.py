@@ -16,6 +16,19 @@ rounds-family schedulers (dense ``batch`` rounds or the width-packed tiles)
 — loaned batches are concatenated onto the local extract as extra rows,
 which a model-specific whole-batch kernel can't ingest (EngineConfig fails
 fast on that combination).
+
+Composition with speculation (``opt_window > 0``, pipeline/speculate.py):
+loans run inside speculative sub-epochs too, but ONLY under the global
+all-or-nothing vote (``opt_commit='global'``).  A loaned batch executes on
+the *borrower*: its staged emissions sit in the borrower's staging buffer
+and would commit with the borrower's verdict, while a straggler at the
+*owner* re-executes the same batch after rollback — a per-device verdict
+could deliver those emissions twice.  The global vote makes every window
+atomic across devices, so the loan's emissions exist exactly once whichever
+branch runs.  EngineConfig rejects ``steal=True`` with
+``opt_commit='device'`` fail-fast.  The ``all_gather``s below are legal
+inside the speculation stage's ``lax.cond`` because the window predicate is
+replicated — every device takes the same branch in the same iteration.
 """
 from __future__ import annotations
 

@@ -81,6 +81,15 @@ def main():
                     help="staging buffer for speculative emissions "
                          "(0 = route_cap); overflow aborts the window, "
                          "never drops")
+    ap.add_argument("--opt-commit", default="device",
+                    choices=["device", "global"],
+                    help="speculation commit locality: 'device' rolls back "
+                         "only devices that received a straggler, 'global' "
+                         "is the atomic all-or-nothing vote (same bits)")
+    ap.add_argument("--opt-adaptive", action="store_true",
+                    help="retune the live speculation window between drain "
+                         "dispatches from the observed rollback rate "
+                         "(--opt-window becomes the cap; --drain only)")
     ap.add_argument("--n-buckets", type=int, default=16)
     ap.add_argument("--bucket-cap", type=int, default=256)
     ap.add_argument("--route-cap", type=int, default=8192)
@@ -121,7 +130,8 @@ def main():
         steal=args.steal, steal_cap=4, claim_cap=8,
         placement=args.placement, rebalance_every=args.rebalance_every,
         migrate_cap=args.migrate_cap, placement_slack=args.placement_slack,
-        opt_window=args.opt_window, opt_stage_cap=args.opt_stage_cap)
+        opt_window=args.opt_window, opt_stage_cap=args.opt_stage_cap,
+        opt_commit=args.opt_commit, opt_adaptive=args.opt_adaptive)
     eng = ParsirEngine(model, cfg, mesh=mesh)
 
     st = eng.init()

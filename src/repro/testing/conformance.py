@@ -93,10 +93,16 @@ SWEEP: dict[str, dict] = {
     # to opt_window epochs past the safe horizon must either commit or roll
     # back to exactly the conservative bits — the oracle knows nothing of
     # speculation, so every assertion below is unchanged.  W=4 needs
-    # n_buckets >= 6 (every conformance engine_kw has >= 8); steal and
-    # adaptive placement compositions are *rejected fail-fast* by
-    # EngineConfig (loans/migration escape the shadow copy), which
-    # tests/test_speculation.py asserts.
+    # n_buckets >= 6 (every conformance engine_kw has >= 8).  The default
+    # commit locality is per-device (only devices that received a straggler
+    # restore their shadow); spec-global pins the PR 9 atomic vote so both
+    # verdict modes stay under oracle proof.  Stealing composes under the
+    # global vote only (loans execute on the borrower — EngineConfig rejects
+    # steal × device-commit fail-fast); adaptive placement composes under
+    # either (windows stop short of rebalance firing epochs).  spec-inject
+    # drives the deterministic straggler-injection harness: every 2nd window
+    # is forced down the rollback path — at ANY device count, D=1 included —
+    # and the drained bits must still match the oracle exactly.
     "spec-w1": dict(opt_window=1),
     "spec-w2": dict(opt_window=2),
     "spec-w4": dict(opt_window=4),
@@ -104,6 +110,12 @@ SWEEP: dict[str, dict] = {
     "spec-packed-a2a": dict(route="a2a", batch_impl="packed", pack_tile=4,
                             opt_window=2),
     "spec-weighted": dict(placement="weighted", opt_window=2),
+    "spec-global": dict(opt_window=2, opt_commit="global"),
+    "spec-steal": dict(route="a2a", steal=True, steal_cap=2, claim_cap=4,
+                       opt_window=2, opt_commit="global"),
+    "spec-adaptive": dict(placement="adaptive", rebalance_every=8,
+                          migrate_cap=8, opt_window=2),
+    "spec-inject": dict(opt_window=2, inject_straggler_every=2),
 }
 
 
@@ -151,10 +163,13 @@ def axes_of(cfg: EngineConfig, n_devices: int) -> str:
     impl = cfg.batch_impl
     if impl == "packed":
         impl += f"(tile={cfg.pack_tile})"
+    opt = f"opt_window={cfg.opt_window}"
+    if cfg.opt_window:
+        opt += f"(commit={cfg.opt_commit})"
     return (f"scheduler={cfg.scheduler} batch_impl={impl} "
             f"route={cfg.route} steal={cfg.steal} "
             f"placement={cfg.placement} epoch_len={cfg.epoch_len:g} "
-            f"opt_window={cfg.opt_window} D={n_devices}")
+            f"{opt} D={n_devices}")
 
 
 def _assert_vs_oracle(eng: ParsirEngine, st, tot: dict,

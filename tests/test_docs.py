@@ -56,9 +56,10 @@ def test_simulate_cli_check_catches_hardcoded_choices(tmp_path):
     # the speculation knobs are spelled as flags and individually required:
     # a new knob in names.SPECULATION_KNOBS that never reaches the CLI is
     # exactly the drift this check exists to catch.
-    assert docs_check._spec_flags(str(tmp_path)) == ("--opt-window",
-                                                     "--opt-stage-cap")
+    assert docs_check._spec_flags(str(tmp_path)) == (
+        "--opt-window", "--opt-stage-cap", "--opt-commit", "--opt-adaptive")
     assert any("exposes no `--opt-window`" in p for p in problems)
+    assert any("exposes no `--opt-commit`" in p for p in problems)
 
 
 def test_cli_exit_status_counts_problems(tmp_path):

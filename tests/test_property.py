@@ -1,6 +1,9 @@
 """Hypothesis property tests for the system invariants:
 
 * calendar insert/extract conserves events and never reorders per object;
+* the speculation shadow window (take_buckets / put_buckets) is a bit-exact
+  restore: take ∘ damage ∘ put is the identity on the window's buckets —
+  ring wrap-around included — and put never touches buckets outside it;
 * the width-packer (batch_impl='packed') is an exact permutation: pack →
   unpack round-trips the (ts, seed, payload, cnt) slice bit-for-bit, the
   work list is stable by (round, row), and no vmap tile mixes rounds;
@@ -20,7 +23,8 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import events as ev
-from repro.core.calendar import extract_sorted, insert, make_calendar
+from repro.core.calendar import (extract_sorted, insert, make_calendar,
+                                 put_buckets, take_buckets)
 from repro.core.pipeline.packing import pack_slice, unpack_slice
 from repro.core.placement import equal_placement, weighted_placement
 from repro.testing.fixtures import random_sorted_slice
@@ -60,6 +64,110 @@ def test_calendar_conserves_and_orders(events):
                 assert np.all(np.diff(row) >= 0), "per-object ts order violated"
             seen += k
     assert seen == len(events)
+
+
+# --------------------------------------------------------------------------
+# speculation shadow windows: take_buckets / put_buckets (speculate.py's
+# rollback restore) — snapshot semantics on the circular bucket ring
+# --------------------------------------------------------------------------
+
+_cal_events = st.lists(st.tuples(st.integers(0, 7),           # local obj
+                                 st.integers(0, 3),           # epoch
+                                 st.floats(0.0, 3.75, width=32),
+                                 st.integers(0, 2**32 - 1)),  # seed
+                       min_size=0, max_size=40)
+
+
+def _populated_cal(events):
+    cal = make_calendar(n_local=8, n_buckets=4, cap=64)
+    if not events:
+        return cal
+    cal, ovf = insert(
+        cal,
+        jnp.asarray([e[0] for e in events], jnp.int32),
+        jnp.asarray([e[1] for e in events], jnp.int32),
+        jnp.asarray([e[1] + (e[2] % 1.0) for e in events], jnp.float32),
+        jnp.asarray([e[3] for e in events], jnp.uint32),
+        jnp.asarray([e[2] for e in events], jnp.float32),
+        jnp.ones((len(events),), bool))
+    assert int(ovf) == 0
+    return cal
+
+
+@given(_cal_events, st.integers(0, 11), st.integers(1, 3), _cal_events)
+def test_take_put_buckets_restores_window_bit_exact(events, e0, n, extra):
+    # take ∘ damage ∘ put == identity: speculative insertions into the
+    # window vanish, the speculative extraction of the safe epoch
+    # reappears, every slot bit-for-bit.  first_epoch ranges well past the
+    # ring size so windows regularly straddle the wrap edge.
+    cal = _populated_cal(events)
+    shadow = take_buckets(cal, jnp.int32(e0), n)
+    # the snapshot is in WINDOW order: axis w holds epoch e0 + w, wherever
+    # that epoch lives on the ring.
+    cnt = np.asarray(cal.cnt)
+    for w in range(n):
+        np.testing.assert_array_equal(np.asarray(shadow.cnt)[:, w],
+                                      cnt[:, (e0 + w) % 4])
+    cal2 = cal
+    if extra:
+        # damage: insert events at window epochs only (a capacity overflow
+        # here is fine — dropped-on-overflow is just less damage to undo)
+        cal2, _ = insert(
+            cal2,
+            jnp.asarray([e[0] for e in extra], jnp.int32),
+            jnp.asarray([e0 + e[1] % n for e in extra], jnp.int32),
+            jnp.asarray([e0 + (e[2] % 1.0) for e in extra], jnp.float32),
+            jnp.asarray([e[3] for e in extra], jnp.uint32),
+            jnp.zeros((len(extra),), jnp.float32),
+            jnp.ones((len(extra),), bool))
+    # ...and a speculative extraction, which clears the first window bucket
+    cal2, *_ = extract_sorted(cal2, jnp.int32(e0))
+    cal3 = put_buckets(cal2, jnp.int32(e0), shadow)
+    for la, lb in zip(cal3, cal):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@given(_cal_events, st.integers(0, 11), st.integers(1, 2))
+def test_put_buckets_leaves_untouched_buckets_alone(events, e0, n):
+    # disjointness: a restore of window [e0, e0+n) must not disturb buckets
+    # outside it — an insertion at epoch e0+n (a distinct ring bucket for
+    # n < n_buckets) survives the rollback untouched.
+    cal = _populated_cal(events)
+    shadow = take_buckets(cal, jnp.int32(e0), n)
+    out_ep = e0 + n
+    cal2, ovf = insert(cal, jnp.asarray([0], jnp.int32),
+                       jnp.asarray([out_ep], jnp.int32),
+                       jnp.asarray([float(out_ep)], jnp.float32),
+                       jnp.asarray([7], jnp.uint32),
+                       jnp.zeros((1,), jnp.float32),
+                       jnp.ones((1,), bool))
+    assert int(ovf) == 0
+    cal3 = put_buckets(cal2, jnp.int32(e0), shadow)
+    ob = out_ep % 4
+    assert int(cal3.cnt[0, ob]) == int(cal.cnt[0, ob]) + 1
+    for w in range(n):
+        b = (e0 + w) % 4
+        for leaf3, leaf0 in zip(cal3, cal):
+            np.testing.assert_array_equal(np.asarray(leaf3)[:, b],
+                                          np.asarray(leaf0)[:, b])
+
+
+def test_take_buckets_wraps_the_ring():
+    # the deterministic wrap case: window [7, 8] on a 4-ring is buckets
+    # [3, 0] — the snapshot must present them in window order regardless.
+    cal = make_calendar(n_local=2, n_buckets=4, cap=8)
+    cal, ovf = insert(cal, jnp.asarray([0, 1], jnp.int32),
+                      jnp.asarray([7, 8], jnp.int32),
+                      jnp.asarray([7.5, 8.5], jnp.float32),
+                      jnp.asarray([1, 2], jnp.uint32),
+                      jnp.zeros((2,), jnp.float32),
+                      jnp.ones((2,), bool))
+    assert int(ovf) == 0
+    shadow = take_buckets(cal, jnp.int32(7), 2)
+    assert int(shadow.cnt[0, 0]) == 1          # epoch 7 → window axis 0
+    assert int(shadow.cnt[1, 1]) == 1          # epoch 8 → window axis 1
+    assert float(shadow.ts[0, 0, 0]) == 7.5
+    assert float(shadow.ts[1, 1, 0]) == 8.5
 
 
 # --------------------------------------------------------------------------

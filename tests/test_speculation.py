@@ -12,11 +12,24 @@ dyadic state vs the oracle) must hold anyway, including through the fused
 drain loop.  This is the straggler-injection test: every cross-device event
 emitted while a window is open *is* a straggler by construction.
 
+Deterministic straggler injection (PR 10): ``inject_straggler_every=n``
+forces every n-th window to the abort path on ALL devices — at D=1, where
+no organic straggler can exist, this is the only way the rollback/restore
+branch executes inside tier-1.  The injected abort sequence is exactly
+predictable on the host (commit advances W_eff+1 epochs, abort advances 1),
+so the tests pin the ``spec_commits``/``rollbacks`` meters to the
+fused-loop iteration count — the PR 10 meter identity: each device's
+``spec_commits + rollbacks`` equals the number of windows it executed,
+whatever its local verdict was.
+
 Also here: the opt_window=0 no-cost guarantee (nothing speculative is even
 built — no shadow copies, byte-identical lowering), and the fail-fast
-rejection of compositions whose state moves would escape the shadow copy
-(stealing, adaptive placement), of a bucket ring too small for the window,
-and of a dead opt_stage_cap.
+rejection matrix — stealing composes only with the global all-or-nothing
+vote (``opt_commit='global'``; a loaned batch executes on the borrower, so
+a per-device verdict could commit a loan's emissions while its owner rolls
+back), a bucket ring too small for the window, and the dead-knob rejections
+(``opt_stage_cap``/``opt_commit``/``opt_adaptive``/``inject_straggler_every``
+without a window).
 """
 import math
 import os
@@ -122,21 +135,132 @@ def test_opt_window_zero_builds_nothing_speculative():
 
 def test_speculation_rejects_escaping_compositions():
     kw = dict(lookahead=0.5, n_buckets=8)
-    with pytest.raises(ValueError, match="steal"):
+    # stealing under a per-device verdict could commit a loan's emissions
+    # while the loan's owner rolls back — only the global vote is sound.
+    with pytest.raises(ValueError, match="global"):
         EngineConfig(**kw, opt_window=2, steal=True)
-    with pytest.raises(ValueError, match="adaptive"):
-        EngineConfig(**kw, opt_window=2, placement="adaptive",
-                     rebalance_every=8)
+    with pytest.raises(ValueError, match="global"):
+        EngineConfig(**kw, opt_window=2, steal=True, opt_commit="device")
+    # ... and with the global vote it now composes (PR 10 widening).
+    assert EngineConfig(**kw, opt_window=2, steal=True,
+                        opt_commit="global").steal
+    # adaptive placement composes under BOTH commit modes: rebalance runs
+    # at the safe epoch only and the window clamps short of every firing.
+    assert EngineConfig(**kw, opt_window=2, placement="adaptive",
+                        rebalance_every=8).opt_window == 2
+    with pytest.raises(ValueError, match="opt_commit"):
+        EngineConfig(**kw, opt_window=2, opt_commit="quorum")
     with pytest.raises(ValueError, match="n_buckets"):
         EngineConfig(lookahead=0.5, n_buckets=4, opt_window=3)
     with pytest.raises(ValueError, match="opt_window"):
         EngineConfig(**kw, opt_window=-1)
+    with pytest.raises(ValueError, match="inject_straggler_every"):
+        EngineConfig(**kw, opt_window=2, inject_straggler_every=-1)
+    # dead knobs without a window fail fast instead of silently no-opping
     with pytest.raises(ValueError, match="opt_stage_cap"):
-        EngineConfig(**kw, opt_stage_cap=64)   # dead without a window
+        EngineConfig(**kw, opt_stage_cap=64)
+    with pytest.raises(ValueError, match="opt_commit"):
+        EngineConfig(**kw, opt_commit="global")
+    with pytest.raises(ValueError, match="opt_adaptive"):
+        EngineConfig(**kw, opt_adaptive=True)
+    with pytest.raises(ValueError, match="inject_straggler_every"):
+        EngineConfig(**kw, inject_straggler_every=2)
     # the staging default resolves to route_cap only when speculating
     assert EngineConfig(**kw, route_cap=512).opt_stage_cap == 0
     assert EngineConfig(**kw, route_cap=512,
                         opt_window=2).opt_stage_cap == 512
+
+
+# -- deterministic straggler injection: the rollback branch, in tier-1 -------
+
+
+def _predict_meters(chunks, W, inject):
+    """Host-side twin of the engine's window walk.
+
+    A committed window advances ``w_eff + 1`` epochs (clamped to land on the
+    chunk bound exactly), an injected abort advances 1; injection fires on
+    every ``inject``-th window — gated on ``w_eff > 0``, matching the engine
+    (a clamped-to-safe window has nothing to abort).  The window counter
+    (``spec_commits + rollbacks``) persists across chunks, exactly like the
+    in-carry Stats meters it predicts.
+    """
+    e, cm, rb = 0, 0, 0
+    for c in chunks:
+        bound = e + c
+        while e < bound:
+            w_eff = min(W, bound - e - 1)
+            if inject and (cm + rb) % inject == inject - 1 and w_eff > 0:
+                rb += 1
+                e += 1
+            else:
+                cm += 1
+                e += w_eff + 1
+    return cm, rb
+
+
+@pytest.mark.parametrize("inject", [2, 3])
+def test_injected_stragglers_roll_back_bit_exact(inject):
+    # D=1 has no organic straggler, so without injection the abort/restore
+    # branch never executes in tier-1.  inject_straggler_every forces every
+    # n-th window down it: the shadow restore must leave the drained bits
+    # identical to the conservative run, and the meters must match the
+    # host-predicted window walk exactly — the deterministic harness.
+    W = 2
+    eng0, spec = _build("phold")
+    n = spec["n_epochs"]
+    s0 = eng0.run(eng0.init(), n)
+    t0 = eng0.totals(s0)
+
+    eng, _ = _build("phold", opt_window=W, inject_straggler_every=inject)
+    s = eng.run(eng.init(), n)
+    t = eng.totals(s)
+
+    cm, rb = _predict_meters([n], W, inject)
+    assert rb > 0, "injection never fired — the rollback branch went untested"
+    assert t["rollbacks"] == rb
+    assert t["spec_commits"] == cm
+    assert t["speculated"] > 0
+    assert t["processed"] == t0["processed"]
+    assert all(t[k] == 0 for k in CLEAN)
+    assert int(np.asarray(s.epoch)[0]) == n    # aborts advance 1, still exact
+    o0, o = eng0.global_object_state(s0), eng.global_object_state(s)
+    for k in o0:
+        np.testing.assert_array_equal(o[k], o0[k],
+                                      err_msg=f"obj[{k}] inject={inject}")
+    np.testing.assert_array_equal(np.asarray(s.cal.cnt),
+                                  np.asarray(s0.cal.cnt))
+
+
+def test_meters_count_iterations_and_stay_out_of_clean():
+    # The PR 10 meter identity: every window ticks exactly ONE of
+    # spec_commits/rollbacks on every device — their sum IS the fused-loop
+    # iteration count, monotone across dispatches, and chunk boundaries
+    # (which re-clamp w_eff to each chunk's bound) are predicted by the
+    # same host walk.  The meters are *activity* meters, not error
+    # counters: the clean-run contract must never reject a rolled-back run.
+    from repro.testing.clean import CLEAN_COUNTERS
+    assert "rollbacks" not in CLEAN_COUNTERS
+    assert "spec_commits" not in CLEAN_COUNTERS
+    assert "speculated" not in CLEAN_COUNTERS
+
+    W, inject = 2, 2
+    eng, spec = _build("phold", opt_window=W, inject_straggler_every=inject)
+    n = spec["n_epochs"]
+    chunks = []
+    st = eng.init()
+    seen, done = 0, 0
+    while done < n:
+        c = min(5, n - done)
+        st = eng.run(st, c)
+        chunks.append(c)
+        done += c
+        t = eng.totals(st)
+        iters = t["spec_commits"] + t["rollbacks"]
+        assert iters > seen, "a dispatched chunk must add >= 1 window"
+        seen = iters
+    cm, rb = _predict_meters(chunks, W, inject)
+    assert (t["spec_commits"], t["rollbacks"]) == (cm, rb), \
+        (t["spec_commits"], t["rollbacks"], cm, rb)
 
 
 # -- negative path: stragglers roll the window back, bits survive ------------
@@ -148,14 +272,21 @@ def test_multidevice_stragglers_roll_back_and_stay_exact():
     # windows are stragglers by construction.  --expect-rollbacks asserts
     # the negative path actually fired (rollbacks > 0) while the full
     # oracle contract held (clean counters, processed count, pending
-    # multiset, bit-exact dyadic state).
+    # multiset, bit-exact dyadic state).  The PR 10 sweep covers both
+    # verdict modes (spec-w2/spec-a2a default to per-device commit,
+    # spec-global pins the PR 9 atomic vote), the widened compositions
+    # (spec-steal under the global vote, spec-adaptive with runtime
+    # rebalancing inside the window schedule) and the deterministic
+    # injection harness at real device count (spec-inject).
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     cmd = [sys.executable, "-m", "repro.testing.conformance",
            "--workload", "phold", "--devices", "4",
-           "--configs", "spec-a2a,spec-w2", "--drain", "--expect-rollbacks"]
+           "--configs",
+           "spec-a2a,spec-w2,spec-global,spec-steal,spec-adaptive,spec-inject",
+           "--drain", "--expect-rollbacks", "--expect-rebalances", "1"]
     r = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                       timeout=900)
+                       timeout=1800)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr
     assert "CONFORMANCE PASS" in r.stdout

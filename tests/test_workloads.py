@@ -34,14 +34,21 @@ SINGLE_DEVICE_CONFIGS = ["batch-allgather", "batch-a2a", "ltf",
                          # speculation (PR 9): at D=1 no straggler exists, so
                          # windows always commit — the pure leap must still be
                          # bit-exact at every width and composed with packing.
-                         "spec-w1", "spec-w4", "spec-packed-a2a"]
+                         # spec-inject (PR 10) forces every 2nd window down
+                         # the rollback path even at D=1, so the shadow
+                         # restore is oracle-checked across the whole zoo.
+                         "spec-w1", "spec-w4", "spec-packed-a2a",
+                         "spec-inject"]
 # configs that only do real work with D > 1 (pairwise a2a exchange, loans);
 # the packed scheduler rides along so tiling is exercised under real
 # exchange and under loan-augmented batches.  spec-a2a puts speculative
 # windows under real cross-device traffic — commits AND rollbacks both land
-# here (tests/test_speculation.py asserts the rollbacks actually fire).
+# here (tests/test_speculation.py asserts the rollbacks actually fire) —
+# and spec-steal (PR 10) composes loans with the window under the global
+# all-or-nothing vote, the only verdict mode sound for borrowed batches.
 MULTI_DEVICE_CONFIGS = ("batch-a2a,steal-allgather,steal-a2a,"
-                        "packed-a2a,steal-packed,spec-a2a,spec-w2")
+                        "packed-a2a,steal-packed,spec-a2a,spec-w2,"
+                        "spec-steal")
 # the placement sweep axis (PR 3): equal vs weighted vs adaptive must reach
 # the identical drained state; exercised on the uniform, skewed and open
 # topologies, with and without stealing on top.  packed-adaptive (PR 4) is
